@@ -1,0 +1,70 @@
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+"""Hillclimb workhorse: measure one (arch x shape x mesh) cell with config
+overrides and print the roofline terms + memory receipts.
+
+    PYTHONPATH=src python -m benchmarks.perf_iter granite-8b train_4k pod \
+        remat_policy=dots attn_impl=xla
+
+Records nothing — the EXPERIMENTS.md §Perf log cites these runs; the final
+optimized configuration is re-swept into benchmarks/results/dryrun.
+"""
+import dataclasses
+import sys
+
+import jax
+
+import repro.configs as configs
+from repro.configs.base import SHAPES
+from benchmarks.roofline import PEAK, HBM, ICI, model_flops
+
+
+def report(rec):
+    t_c = rec["hlo_flops"] / PEAK
+    t_m = rec["hlo_bytes"] / HBM
+    t_x = rec["collectives"]["total_bytes"] / ICI
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful = mf / (rec["n_devices"] * PEAK)
+    dom = max((t_c, "compute"), (t_m, "memory"), (t_x, "collective"))
+    print(f"{rec['arch']} {rec['shape']} {rec['mesh']}  "
+          f"compile={rec['compile_s']}s")
+    print(f"  t_compute={t_c:.3f}s t_memory={t_m:.3f}s t_collective={t_x:.3f}s"
+          f"  dominant={dom[1]}")
+    print(f"  per-dev flops={rec['hlo_flops']:.4g} bytes={rec['hlo_bytes']:.4g}"
+          f" coll={rec['collectives']['total_bytes']:.4g}")
+    print(f"  coll by op: "
+          f"{ {k: f'{v:.3g}' for k, v in rec['collectives']['bytes_by_op'].items()} }")
+    print(f"  MODEL_FLOPS={mf:.3g} useful_ratio="
+          f"{mf / max(rec['hlo_flops'] * rec['n_devices'], 1):.3f} "
+          f"roofline_frac={useful / max(dom[0], 1e-12):.4f}")
+    print(f"  mem/device: args={rec.get('argument_size_in_bytes', 0)/2**30:.2f}GiB "
+          f"temp={rec.get('temp_size_in_bytes', 0)/2**30:.2f}GiB")
+    return dom
+
+
+def main():
+    arch, shape, mesh = sys.argv[1:4]
+    overrides = dict(kv.split("=", 1) for kv in sys.argv[4:])
+    cfg0 = configs.get(arch)
+    typed = {}
+    for k, v in overrides.items():
+        cur = getattr(cfg0, k)
+        if isinstance(cur, bool):
+            typed[k] = v.lower() in ("1", "true")
+        elif isinstance(cur, int):
+            typed[k] = int(v)
+        elif isinstance(cur, float):
+            typed[k] = float(v)
+        else:
+            typed[k] = v
+    cfg = dataclasses.replace(cfg0, **typed)
+    configs.ARCHS[arch] = cfg
+    from repro.launch import dryrun
+
+    rec = dryrun.run_cell(arch, shape, mesh)
+    configs.ARCHS[arch] = cfg0
+    report(rec)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,126 @@
+"""Benchmark runner: one section per paper table/figure + framework perf.
+
+    PYTHONPATH=src python -m benchmarks.run
+
+Emits ``name,us_per_call,derived`` CSV lines per benchmark at the end.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+CSV: list[tuple[str, float, str]] = []
+
+
+def _bench_kernels():
+    """Micro wall-times for the Pallas kernels (interpret mode on CPU: this
+    measures correctness-path overhead, not TPU perf — the roofline section
+    carries the perf numbers)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.kernels.conv_fused.ops import fused_conv_block
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.ssm_scan.ops import ssm_scan
+
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.integers(-128, 128, (1, 16, 16, 8)).astype(np.int8))
+    w = jnp.asarray(rng.integers(-128, 128, (3, 3, 8, 16)).astype(np.int8))
+    b = jnp.asarray(rng.integers(-100, 100, 16).astype(np.int32))
+
+    def timeit(name, fn, derived=""):
+        fn()  # compile
+        t0 = time.perf_counter()
+        for _ in range(3):
+            out = fn()
+        jax.block_until_ready(out)
+        CSV.append((name, (time.perf_counter() - t0) / 3 * 1e6, derived))
+
+    timeit("kernel.conv_fused_16x16x8",
+           lambda: fused_conv_block(x, w, b, pad=(1, 1), shift=6, relu=True),
+           "int8 conv+relu, interpret")
+    q = jnp.asarray(rng.standard_normal((1, 128, 4, 32)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((1, 128, 2, 32)), jnp.float32)
+    timeit("kernel.flash_attention_128",
+           lambda: flash_attention(q, k, k, blk_q=32, blk_k=32),
+           "causal GQA, interpret")
+    qs = jnp.asarray(rng.standard_normal((1, 128, 2, 16)), jnp.float32)
+    la = -jnp.abs(jnp.asarray(rng.standard_normal((1, 128, 2)), jnp.float32))
+    timeit("kernel.ssm_scan_128",
+           lambda: ssm_scan(qs, qs, qs, la, chunk=32),
+           "chunked recurrence, interpret")
+
+
+def main() -> None:
+    print("=" * 72)
+    print("## Table 3: fusion speedups + compilation cost (ZU2)")
+    print("=" * 72)
+    from benchmarks.table3 import main as table3_main
+
+    t0 = time.perf_counter()
+    table3_main()
+    CSV.append(("table3.full", (time.perf_counter() - t0) * 1e6,
+                "4 CNNs x 3 strategies, simulator-scored"))
+
+    print("\n" + "=" * 72)
+    print("## Table 4: ZU9 batch-3 throughput + energy efficiency")
+    print("=" * 72)
+    from benchmarks.table4 import main as table4_main
+
+    table4_main()
+
+    print("\n" + "=" * 72)
+    print("## Fig. 8/9: micro-fusion cases")
+    print("=" * 72)
+    from benchmarks.micro_fusion import main as micro_main
+
+    micro_main()
+
+    print("\n" + "=" * 72)
+    print("## Table 2: evaluation-method triad")
+    print("=" * 72)
+    from benchmarks.evaluators import main as eval_main
+
+    eval_main()
+
+    print("\n" + "=" * 72)
+    print("## DNNVM planner on LM architectures (lm_bridge)")
+    print("=" * 72)
+    from repro import configs
+    from repro.core import lm_bridge
+
+    for name in configs.ARCHS:
+        print("  " + lm_bridge.report(configs.get(name), seq_len=32768))
+
+    print("\n" + "=" * 72)
+    print("## Pallas kernel micro-times (interpret mode)")
+    print("=" * 72)
+    _bench_kernels()
+
+    print("\n" + "=" * 72)
+    print("## Roofline (from dry-run artifacts, single pod)")
+    print("=" * 72)
+    try:
+        from benchmarks.roofline import load, pick_hillclimb, table
+
+        rows = load("pod")
+        ok = [r for r in rows if r.get("status") == "ok"]
+        if ok:
+            print(table(rows))
+            print("\nhillclimb candidates:", pick_hillclimb(rows))
+            CSV.append(("roofline.cells_ok", float(len(ok)),
+                        "dry-run cells with receipts"))
+        else:
+            print("(no dry-run artifacts yet — run "
+                  "`python -m repro.launch.dryrun --all` first)")
+    except Exception as e:  # roofline is optional when artifacts absent
+        print(f"(roofline skipped: {e})")
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in CSV:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

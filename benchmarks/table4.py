@@ -1,0 +1,38 @@
+"""Reproduce the "Ours / ZU9 @330 MHz batch 3" column of paper Table 4.
+
+Paper: VGG 2.82 TOPs/s, ResNet50 1.38 TOPs/s, GoogLeNet 1.41 TOPs/s
+(ZU9, 4 MB BRAM, int8, batch 3, peak 4.05 TOPs/s) and energy efficiency
+123.7 GOPs/s/W for VGG at 22.8 W.
+
+    PYTHONPATH=src python -m benchmarks.table4
+"""
+from __future__ import annotations
+
+from repro.cnn import build
+from repro.core import partition, pathsearch
+from repro.core.cost import SimulatorEvaluator
+from repro.hw import ZU9
+
+PAPER = {"vgg16": 2.82e12, "resnet50": 1.38e12, "googlenet": 1.41e12}
+ZU9_POWER_W = 22.8
+
+
+def main() -> None:
+    print(f"# Table 4 reproduction — ZU9 @330MHz batch 3 "
+          f"(peak {ZU9.peak_ops_per_s/1e12:.2f} TOPs/s)")
+    for name in ("vgg16", "resnet50", "googlenet"):
+        g = build(name, batch=3)
+        dv = partition.device_of(g, "paper")
+        sim = SimulatorEvaluator(g, ZU9)
+        opt = pathsearch.search(g, ZU9, evaluator=sim, device_of=dv)
+        secs = sim.strategy_report(opt).seconds(ZU9.freq_hz)
+        acc_ops = sum(g.ops(n.name) for n in g if dv(n.name) == "acc")
+        tops = acc_ops / secs / 1e12
+        eff = acc_ops / secs / 1e9 / ZU9_POWER_W
+        print(f"  {name:10s} {tops:5.2f} TOPs/s (paper {PAPER[name]/1e12:.2f})"
+              f"  {eff:6.1f} GOPs/s/W"
+              + ("  (paper 123.7)" if name == "vgg16" else ""))
+
+
+if __name__ == "__main__":
+    main()

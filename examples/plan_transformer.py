@@ -1,0 +1,15 @@
+"""The DNNVM planner applied to the LM architectures (DESIGN.md §3):
+per-arch kernel-fusion decisions (flash attention / chunked scan) from the
+same condition-1 capacity check + cost comparison the CNN planner uses.
+
+    PYTHONPATH=src python examples/plan_transformer.py
+"""
+from repro import configs
+from repro.core import lm_bridge
+
+print("DNNVM block-level planning against the TPU v5e device model\n")
+for seq in (4096, 32768):
+    print(f"== seq_len {seq}")
+    for name in configs.ARCHS:
+        print("  " + lm_bridge.report(configs.get(name), seq_len=seq))
+    print()

@@ -1,0 +1,274 @@
+"""Execution of a compiled strategy as JAX callables (runtime support, §3.2).
+
+Three backends:
+
+* ``float``      — float32 reference semantics (calibration + accuracy oracle);
+* ``int8_ref``   — pure-jnp fixed-point semantics from ``int8_ops`` (the
+  validation oracle; bit-exact by definition);
+* ``int8_pallas``— fused groups whose pattern the Pallas conv_fused kernel
+  supports run as ONE kernel launch (LOAD->CONV->MISC->SAVE on-chip, the
+  paper's fusion); everything else falls back to the ref ops.  The contract —
+  enforced by validate.py and the kernel tests — is bit-exactness with
+  ``int8_ref``.
+
+Mixed compilation (paper §2.3.5): nodes partitioned to the host execute as
+plain float ops on dequantized inputs (softmax & friends).
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import int8_ops
+from repro.core.quantize import QuantizedModel
+from repro.core.xgraph import XGraph, _padding
+
+
+# ------------------------------------------------------------------ float ref
+def _float_node(g: XGraph, node, env, params):
+    a = node.attrs
+    op = node.op
+    xs = [env[i] for i in node.inputs]
+    if op in ("conv", "dilated_conv", "depthwise_conv"):
+        kh, kw = a["kernel"]
+        dil = a.get("dilation", (1, 1))
+        ph, pw = _padding(a.get("pad", "same"), dil[0] * (kh - 1) + 1,
+                          dil[1] * (kw - 1) + 1)
+        w = params[node.name]["w"]
+        b = params[node.name].get("b", np.zeros(w.shape[-1], np.float32))
+        groups = xs[0].shape[-1] if op == "depthwise_conv" else 1
+        y = jax.lax.conv_general_dilated(
+            xs[0], jnp.asarray(w), a.get("stride", (1, 1)),
+            [(ph, ph), (pw, pw)], rhs_dilation=dil,
+            dimension_numbers=("NHWC", "HWIO", "NHWC"),
+            feature_group_count=groups) + jnp.asarray(b)
+    elif op == "fc":
+        w = params[node.name]["w"]
+        b = params[node.name].get("b", np.zeros(w.shape[-1], np.float32))
+        n = xs[0].shape[0]
+        y = (xs[0].reshape(n, -1) @ jnp.asarray(w) + jnp.asarray(b)).reshape(
+            n, 1, 1, -1)
+    elif op == "maxpool":
+        kh, kw = a["kernel"]
+        sh, sw = a.get("stride", a["kernel"])
+        ph, pw = _padding(a.get("pad", "valid"), kh, kw)
+        oh = g.shape(node.name)[1]
+        ow = g.shape(node.name)[2]
+        h, w_ = xs[0].shape[1:3]
+        eh = max(0, (oh - 1) * sh + kh - h - 2 * ph)
+        ew = max(0, (ow - 1) * sw + kw - w_ - 2 * pw)
+        y = jax.lax.reduce_window(
+            xs[0], -jnp.inf, jax.lax.max, (1, kh, kw, 1), (1, sh, sw, 1),
+            ((0, 0), (ph, ph + eh), (pw, pw + ew), (0, 0)))
+    elif op == "avgpool":
+        kh, kw = a["kernel"]
+        sh, sw = a.get("stride", a["kernel"])
+        ph, pw = _padding(a.get("pad", "valid"), kh, kw)
+        y = jax.lax.reduce_window(
+            xs[0], 0.0, jax.lax.add, (1, kh, kw, 1), (1, sh, sw, 1),
+            ((0, 0), (ph, ph), (pw, pw), (0, 0))) / (kh * kw)
+    elif op == "global_avgpool":
+        y = jnp.mean(xs[0], axis=(1, 2), keepdims=True)
+    elif op == "eltwise_add":
+        y = sum(xs)
+    elif op == "concat":
+        y = jnp.concatenate(xs, axis=-1)
+    elif op == "upsample":
+        y = int8_ops.upsample(xs[0], a.get("factor", 2))
+    elif op == "reorg":
+        y = int8_ops.reorg(xs[0], a.get("stride", 2))
+    elif op == "softmax":
+        y = jax.nn.softmax(xs[0], axis=-1)
+    elif op == "deconv":
+        w = params[node.name]["w"]
+        b = params[node.name].get("b", np.zeros(w.shape[-1], np.float32))
+        y = jax.lax.conv_transpose(
+            xs[0], jnp.asarray(w), a.get("stride", (2, 2)), "SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + jnp.asarray(b)
+    else:
+        raise ValueError(f"float executor: unknown op {op}")
+    if a.get("relu"):
+        y = jax.nn.relu(y)
+    return y
+
+
+def run_float(g: XGraph, params: dict, x: np.ndarray) -> dict:
+    """All node activations in float32 (used by calibration)."""
+
+    @jax.jit
+    def go(x):
+        env = {}
+        for node in g:
+            if node.op == "input":
+                env[node.name] = x
+            else:
+                env[node.name] = _float_node(g, node, env, params)
+        return env
+
+    return {k: np.asarray(v) for k, v in go(jnp.asarray(x, jnp.float32)).items()}
+
+
+def build_float_fn(g: XGraph, params: dict):
+    outputs = [n.name for n in g if not g.consumers(n.name)]
+
+    @jax.jit
+    def fn(x):
+        env = {}
+        for node in g:
+            env[node.name] = (x if node.op == "input"
+                              else _float_node(g, node, env, params))
+        return {o: env[o] for o in outputs}
+
+    return fn
+
+
+# -------------------------------------------------------------------- int8
+def _int8_node(g: XGraph, node, env, qm: QuantizedModel):
+    a, op = node.attrs, node.op
+    xs = [env[i] for i in node.inputs]
+    relu = bool(a.get("relu"))
+    if op in ("conv", "dilated_conv"):
+        kh, kw = a["kernel"]
+        dil = a.get("dilation", (1, 1))
+        ph, pw = _padding(a.get("pad", "same"), dil[0] * (kh - 1) + 1,
+                          dil[1] * (kw - 1) + 1)
+        return int8_ops.conv2d(xs[0], jnp.asarray(qm.weights[node.name]),
+                               jnp.asarray(qm.biases[node.name]),
+                               stride=a.get("stride", (1, 1)), pad=(ph, pw),
+                               dilation=dil, shift=qm.shift_for(g, node.name),
+                               relu=relu)
+    if op == "depthwise_conv":
+        kh, kw = a["kernel"]
+        ph, pw = _padding(a.get("pad", "same"), kh, kw)
+        return int8_ops.depthwise_conv2d(
+            xs[0], jnp.asarray(qm.weights[node.name]),
+            jnp.asarray(qm.biases[node.name]), stride=a.get("stride", (1, 1)),
+            pad=(ph, pw), shift=qm.shift_for(g, node.name), relu=relu)
+    if op == "fc":
+        return int8_ops.fc(xs[0], jnp.asarray(qm.weights[node.name]),
+                           jnp.asarray(qm.biases[node.name]),
+                           shift=qm.shift_for(g, node.name), relu=relu)
+    if op == "maxpool":
+        kh, kw = a["kernel"]
+        ph, pw = _padding(a.get("pad", "valid"), kh, kw)
+        return int8_ops.maxpool(xs[0], kernel=a["kernel"],
+                                stride=a.get("stride", a["kernel"]),
+                                pad=(ph, pw), ceil_mode=a.get("ceil_mode", True))
+    if op == "avgpool":
+        kh, kw = a["kernel"]
+        ph, pw = _padding(a.get("pad", "valid"), kh, kw)
+        return int8_ops.avgpool(xs[0], kernel=a["kernel"],
+                                stride=a.get("stride", a["kernel"]), pad=(ph, pw))
+    if op == "global_avgpool":
+        return int8_ops.global_avgpool(xs[0])
+    if op == "eltwise_add":
+        fs = [qm.f_a[i] for i in node.inputs]
+        return int8_ops.eltwise_add(xs, fs, qm.f_a[node.name], relu=relu)
+    if op == "concat":
+        fs = [qm.f_a[i] for i in node.inputs]
+        return int8_ops.concat(xs, fs, qm.f_a[node.name])
+    if op == "upsample":
+        return int8_ops.upsample(xs[0], a.get("factor", 2))
+    if op == "reorg":
+        return int8_ops.reorg(xs[0], a.get("stride", 2))
+    if op == "softmax":  # host op: dequantize, float softmax
+        f_in = qm.f_a[node.inputs[0]]
+        return jax.nn.softmax(xs[0].astype(jnp.float32) * 2.0 ** -f_in, axis=-1)
+    raise ValueError(f"int8 executor: unknown op {op}")
+
+
+class Int8Executor:
+    """Executes a fusion strategy on int8 data.
+
+    backend="ref"    : per-node jnp fixed-point ops (oracle).
+    backend="pallas" : groups the fused kernel supports run as one
+                       ``kernels.conv_fused`` launch (interpret mode on CPU);
+                       everything else uses the ref path.  Bit-exact with
+                       "ref" by contract.
+    """
+
+    def __init__(self, g: XGraph, qm: QuantizedModel, strategy=None,
+                 backend: str = "ref", interpret: bool = True):
+        self.g, self.qm, self.backend = g, qm, backend
+        if strategy is not None:
+            # horizontal (shared-input) groups execute per-member: the sharing
+            # is a LOAD-time optimization, numerics are per-op identical
+            from repro.core.pathsearch import order_groups
+            groups = strategy.groups + [[m] for hg in strategy.horizontal
+                                        for m in hg]
+            groups += [[h] for h in strategy.meta.get("host_nodes", [])]
+            self.groups = order_groups(g, groups)
+        else:
+            self.groups = [[n] for n in g.compute_nodes()]
+        self.interpret = interpret
+        self._fn = None
+
+    def _build(self):
+        g, qm = self.g, self.qm
+        if self.backend == "pallas":
+            from repro.kernels.conv_fused import ops as fused_ops
+
+        def fn(x):
+            env = {}
+            for node in g:
+                if node.op == "input":
+                    env[node.name] = x
+            for group in self.groups:
+                if self.backend == "pallas":
+                    desc = fused_ops.group_descriptor(g, qm, group)
+                    if desc is not None:
+                        outs = fused_ops.run_group(desc, env, qm,
+                                                   interpret=self.interpret)
+                        env.update(outs)
+                        continue
+                for name in group:
+                    env[name] = _int8_node(g, g.nodes[name], env, qm)
+            outputs = [n.name for n in g if not g.consumers(n.name)]
+            return {o: env[o] for o in outputs}
+
+        return jax.jit(fn)
+
+    def __call__(self, x: np.ndarray) -> dict:
+        if self._fn is None:
+            self._fn = self._build()
+        out = self._fn(jnp.asarray(x))
+        return {k: np.asarray(v) for k, v in out.items()}
+
+
+def build_group_callable(g: XGraph, group: list, params_or_qm):
+    """One group as a standalone jitted callable with random inputs — the
+    'on-board' evaluator's unit of measurement."""
+    first = g.nodes[group[0]]
+    in_names = list(dict.fromkeys(
+        i for nm in group for i in g.nodes[nm].inputs
+        if i not in group))
+    rng = np.random.default_rng(0)
+    ins = []
+    for i in in_names:
+        shp = g.shape(i)
+        ins.append(jnp.asarray(rng.standard_normal(shp), jnp.float32))
+
+    if isinstance(params_or_qm, QuantizedModel):
+        qm = params_or_qm
+
+        @jax.jit
+        def fn(*xs):
+            env = dict(zip(in_names, [int8_ops.sat8(x.astype(jnp.int32)) for x in xs]))
+            for nm in group:
+                env[nm] = _int8_node(g, g.nodes[nm], env, qm)
+            return env[group[-1]]
+    else:
+        params = params_or_qm
+
+        @jax.jit
+        def fn(*xs):
+            env = dict(zip(in_names, xs))
+            for nm in group:
+                env[nm] = _float_node(g, g.nodes[nm], env, params)
+            return env[group[-1]]
+
+    return fn, ins

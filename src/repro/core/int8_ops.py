@@ -1,0 +1,143 @@
+"""Bit-exact int8 fixed-point operator semantics (paper §2.3.4, §3.2).
+
+Every tensor is int8 with a per-tensor fraction ``f``: real ≈ q · 2^{-f}.
+Accumulation is int32; requantization uses round-half-away-from-zero and
+saturates to [-128, 127] — the Angel-Eye-style shifting/truncation/rounding
+the validation bench must reproduce "without even a one-bit difference".
+
+These functions are THE semantics: the Pallas fused kernel, the jnp fallback
+executor and the validation oracle all call (or replicate exactly) what is
+defined here.  Everything is pure jnp and jit-safe.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+I8_MIN, I8_MAX = -128, 127
+
+
+def round_shift(x: jnp.ndarray, s) -> jnp.ndarray:
+    """x * 2^{-s} with round-half-away-from-zero; x int32, s may be negative
+    (negative s = left shift, exact)."""
+    x = x.astype(jnp.int32)
+
+    def right(x, s):
+        ax = jnp.abs(x)
+        r = (ax + (1 << (s - 1))) >> s
+        return jnp.sign(x) * r
+
+    s = jnp.asarray(s, jnp.int32)
+    return jnp.where(s > 0, right(x, jnp.maximum(s, 1)),
+                     x << jnp.maximum(-s, 0))
+
+
+def sat8(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.clip(x, I8_MIN, I8_MAX).astype(jnp.int8)
+
+
+def requantize(acc: jnp.ndarray, shift, relu: bool = False) -> jnp.ndarray:
+    """int32 accumulator -> int8 output at the target fraction."""
+    y = round_shift(acc, shift)
+    if relu:
+        y = jnp.maximum(y, 0)
+    return sat8(y)
+
+
+def rescale(q: jnp.ndarray, f_from: int, f_to: int) -> jnp.ndarray:
+    """Change fraction of an int8 tensor (returns int32, NOT saturated —
+    callers saturate after combining)."""
+    return round_shift(q.astype(jnp.int32), f_from - f_to)
+
+
+# ----------------------------------------------------------------- operators
+def conv2d(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *,
+           stride=(1, 1), pad=(0, 0), dilation=(1, 1), groups: int = 1,
+           shift: int = 0, relu: bool = False) -> jnp.ndarray:
+    """x (N,H,W,IC) int8 | w (KH,KW,IC/g,OC) int8 | b (OC,) int32 at f_x+f_w.
+    Output int8 at f_y where shift = f_x + f_w - f_y."""
+    acc = jax.lax.conv_general_dilated(
+        x.astype(jnp.int32), w.astype(jnp.int32),
+        window_strides=stride,
+        padding=[(pad[0], pad[0]), (pad[1], pad[1])],
+        rhs_dilation=dilation,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=groups,
+        preferred_element_type=jnp.int32)
+    acc = acc + b.astype(jnp.int32)
+    return requantize(acc, shift, relu)
+
+
+def depthwise_conv2d(x, w, b, *, stride=(1, 1), pad=(0, 0), shift=0, relu=False):
+    c = x.shape[-1]
+    return conv2d(x, w, b, stride=stride, pad=pad, groups=c, shift=shift, relu=relu)
+
+
+def fc(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray, *, shift: int = 0,
+       relu: bool = False) -> jnp.ndarray:
+    """x (N,H,W,C) int8 -> (N,1,1,OC); w ((H*W*C), OC)."""
+    n = x.shape[0]
+    acc = jnp.dot(x.reshape(n, -1).astype(jnp.int32), w.astype(jnp.int32),
+                  preferred_element_type=jnp.int32) + b.astype(jnp.int32)
+    return requantize(acc, shift, relu).reshape(n, 1, 1, -1)
+
+
+def maxpool(x: jnp.ndarray, *, kernel, stride, pad=(0, 0),
+            ceil_mode: bool = True) -> jnp.ndarray:
+    kh, kw = kernel
+    sh, sw = stride
+    n, h, w, c = x.shape
+    ph, pw = pad
+    if ceil_mode:  # Caffe: pad right/bottom so every window is covered
+        import math
+        oh = math.ceil((h + 2 * ph - kh) / sh) + 1
+        ow = math.ceil((w + 2 * pw - kw) / sw) + 1
+        eh = (oh - 1) * sh + kh - h - 2 * ph
+        ew = (ow - 1) * sw + kw - w - 2 * pw
+    else:
+        eh = ew = 0
+    return jax.lax.reduce_window(
+        x, jnp.int8(I8_MIN), jax.lax.max,
+        window_dimensions=(1, kh, kw, 1), window_strides=(1, sh, sw, 1),
+        padding=((0, 0), (ph, ph + max(0, eh)), (pw, pw + max(0, ew)), (0, 0)))
+
+
+def avgpool(x: jnp.ndarray, *, kernel, stride, pad=(0, 0)) -> jnp.ndarray:
+    kh, kw = kernel
+    sh, sw = stride
+    s = jax.lax.reduce_window(
+        x.astype(jnp.int32), jnp.int32(0), jax.lax.add,
+        window_dimensions=(1, kh, kw, 1), window_strides=(1, sh, sw, 1),
+        padding=((0, 0), (pad[0], pad[0]), (pad[1], pad[1]), (0, 0)))
+    cnt = kh * kw
+    return sat8(jnp.sign(s) * ((jnp.abs(s) + cnt // 2) // cnt))
+
+
+def global_avgpool(x: jnp.ndarray) -> jnp.ndarray:
+    n, h, w, c = x.shape
+    s = jnp.sum(x.astype(jnp.int32), axis=(1, 2), keepdims=True)
+    cnt = h * w
+    return sat8(jnp.sign(s) * ((jnp.abs(s) + cnt // 2) // cnt))
+
+
+def eltwise_add(xs, fs, f_out: int, relu: bool = False) -> jnp.ndarray:
+    acc = sum(rescale(x, f, f_out) for x, f in zip(xs, fs))
+    if relu:
+        acc = jnp.maximum(acc, 0)
+    return sat8(acc)
+
+
+def concat(xs, fs, f_out: int) -> jnp.ndarray:
+    return jnp.concatenate([sat8(rescale(x, f, f_out)) for x, f in zip(xs, fs)],
+                           axis=-1)
+
+
+def upsample(x: jnp.ndarray, factor: int = 2) -> jnp.ndarray:
+    return jnp.repeat(jnp.repeat(x, factor, axis=1), factor, axis=2)
+
+
+def reorg(x: jnp.ndarray, stride: int = 2) -> jnp.ndarray:
+    n, h, w, c = x.shape
+    s = stride
+    x = x.reshape(n, h // s, s, w // s, s, c)
+    return x.transpose(0, 1, 3, 2, 4, 5).reshape(n, h // s, w // s, c * s * s)

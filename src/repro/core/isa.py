@@ -1,0 +1,108 @@
+"""Custom ISA (paper §3.1): LOAD / SAVE / CONV / POOL / MISC coarse
+instructions with dependency bits.
+
+The assembler emits one instruction stream per execution group; instructions
+are variable-grain (one CONV covers a whole tile's worth of MACs — the paper's
+"coarse-grained nature of the ISA").  Dependencies are explicit instruction
+ids, the hardware analogue of the dependency bits that let the Dispatcher
+issue LOAD(t+1) while CONV(t) runs (double buffering).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+from repro.hw import DeviceModel
+from repro.core.tiling import GroupTiling
+from repro.core.xgraph import XGraph
+
+# DDR_RD / DDR_WR: the AXI read and write channels are independent (the
+# paper's Fig. 8/9 timelines show LOAD and SAVE overlapping), so LOAD and
+# SAVE occupy separate bandwidth lanes; CONV / POOL / MISC mirror the
+# accelerator's execution modules.
+ENGINES = ("DDR_RD", "DDR_WR", "CONV", "POOL", "MISC")
+
+
+@dataclasses.dataclass
+class Instr:
+    iid: int
+    engine: str          # one of ENGINES
+    opcode: str          # LOAD / SAVE / CONV / POOL / MISC / END
+    cycles: int
+    deps: tuple[int, ...] = ()
+    tag: str = ""
+
+
+def emit_group(g: XGraph, group: list[str], tiling: GroupTiling,
+               dev: DeviceModel, base_id: int = 0,
+               entry_deps: tuple[int, ...] = ()) -> list[Instr]:
+    """Assemble the tiled instruction stream for one fused group.
+
+    One LOAD -> CONV -> POOL/MISC -> SAVE chain per spatial tile; oc passes
+    are folded into per-tile durations (keeps streams compact for deep nets
+    without changing the schedule the time wheel sees).
+    """
+    instrs: list[Instr] = []
+    nid = base_id
+    n_t = max(1, tiling.n_spatial_tiles)
+    bw_cyc = dev.dram_bw_bytes_per_s / dev.freq_hz  # DDR bytes per cycle
+
+    def cyc_for_bytes(b: float) -> int:
+        return max(1, math.ceil(b / bw_cyc))
+
+    load_c = cyc_for_bytes((tiling.load_bytes + tiling.weight_bytes) / n_t)
+    save_c = cyc_for_bytes(tiling.save_bytes / n_t)
+    conv_c = max(0, math.ceil(tiling.conv_cycles / n_t))
+    pool_c = max(0, math.ceil(tiling.pool_cycles / n_t))
+    misc_c = max(0, math.ceil(tiling.misc_cycles / n_t))
+
+    for t in range(n_t):
+        li = Instr(nid, "DDR_RD", "LOAD", load_c,
+                   entry_deps if t == 0 else (), tag=f"{group[0]}@t{t}")
+        nid += 1
+        last = li.iid
+        instrs.append(li)
+        for eng, cyc in (("CONV", conv_c), ("POOL", pool_c), ("MISC", misc_c)):
+            if cyc:
+                ins = Instr(nid, eng, eng, cyc, (last,), tag=f"{group[0]}@t{t}")
+                nid += 1
+                last = ins.iid
+                instrs.append(ins)
+        si = Instr(nid, "DDR_WR", "SAVE", save_c, (last,), tag=f"{group[-1]}@t{t}")
+        nid += 1
+        instrs.append(si)
+    return instrs
+
+
+def emit_strategy(g: XGraph, groups: list[list[str]],
+                  tilings: list[GroupTiling], dev: DeviceModel) -> list[Instr]:
+    """Assemble the whole execution strategy with *dataflow* dependency bits:
+    a group's first LOAD waits on the SAVEs of exactly the groups producing
+    its external inputs.  Independent groups (e.g. Inception branches) then
+    overlap across the CONV/POOL/MISC engines — the latency hiding of
+    §4.1.3 ("different operations can be concurrently executed by different
+    computation modules")."""
+    out: list[Instr] = []
+    nid = 0
+    save_of: dict[str, int] = {}  # producer node -> SAVE instr id
+    for group, tiling in zip(groups, tilings):
+        gset = set(group)
+        ext = [i for nm in group for i in g.nodes[nm].inputs if i not in gset]
+        deps = tuple(sorted({save_of[i] for i in ext if i in save_of}))
+        instrs = emit_group(g, group, tiling, dev, base_id=nid, entry_deps=deps)
+        nid += len(instrs)
+        out.extend(instrs)
+        saves = [i for i in instrs if i.opcode == "SAVE"]
+        if saves:
+            # chain groups expose only their tail; horizontal groups expose
+            # every member (each sibling's output lands in DDR)
+            tails = [group[-1]] if _is_chain(g, group) else list(group)
+            for nm in tails:
+                save_of[nm] = saves[-1].iid
+    return out
+
+
+def _is_chain(g: XGraph, group: list[str]) -> bool:
+    return all(group[i] in g.nodes[group[i + 1]].inputs
+               for i in range(len(group) - 1)) or len(group) == 1

@@ -1,0 +1,61 @@
+"""Validation environment (paper §3.2, "Validation Module").
+
+"Our validation tools can prevent even a one-bit difference between the
+results by the CPU and the results by the FPGA."
+
+Here: the pure-jnp fixed-point executor is the CPU-side oracle; the Pallas
+fused-kernel executor (interpret mode on this container, real MXU on TPU) is
+the hardware side.  ``bit_exact`` fails on a single differing int8 value.
+It also checks that *fusion itself* never changes numerics: any strategy must
+produce the same bits as the unfused naive execution.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.core.executor import Int8Executor, build_float_fn
+from repro.core.quantize import QuantizedModel
+from repro.core.xgraph import XGraph
+
+
+@dataclasses.dataclass
+class ValidationReport:
+    bit_exact: bool
+    n_outputs: int
+    max_abs_diff: int
+    sqnr_db: dict  # vs float reference, per output
+
+    def __bool__(self) -> bool:
+        return self.bit_exact
+
+
+def bit_exact(g: XGraph, qm: QuantizedModel, x: np.ndarray, strategy=None,
+              backend: str = "pallas", float_params=None) -> ValidationReport:
+    ref = Int8Executor(g, qm, strategy=None, backend="ref")(x)        # naive, unfused
+    got = Int8Executor(g, qm, strategy=strategy, backend=backend)(x)  # fused path
+    assert set(ref) == set(got), f"output sets differ: {set(ref)} vs {set(got)}"
+    max_diff = 0
+    exact = True
+    for k in ref:
+        r, o = np.asarray(ref[k]), np.asarray(got[k])
+        if r.dtype != o.dtype or not np.array_equal(r, o):
+            exact = False
+            if r.shape == o.shape:
+                max_diff = max(max_diff,
+                               int(np.max(np.abs(r.astype(np.int64) - o.astype(np.int64)))))
+            else:
+                max_diff = -1
+    sqnr = {}
+    if float_params is not None:
+        fl = build_float_fn(g, float_params)(x.astype(np.float32))
+        for k in ref:
+            f = np.asarray(fl[k], np.float64)
+            q = np.asarray(ref[k], np.float64)
+            if np.issubdtype(np.asarray(ref[k]).dtype, np.integer):
+                q = q * 2.0 ** -qm.f_a[k]
+            p_sig = float(np.mean(f ** 2)) or 1e-12
+            p_err = float(np.mean((f - q) ** 2)) or 1e-12
+            sqnr[k] = 10.0 * np.log10(p_sig / p_err)
+    return ValidationReport(exact, len(ref), max_diff, sqnr)

@@ -1,0 +1,43 @@
+"""Elastic re-meshing: rebuild the mesh from the devices that remain and
+re-place a checkpointed state onto it.
+
+Policy: keep the "model" axis fixed (TP degree is baked into layouts and
+kernel block shapes) and shrink the data-parallel axes to the largest
+multiple that still divides the surviving device count — the standard
+elastic-DP design.  Re-placement itself is just jax.device_put with the new
+NamedShardings (the checkpoint format is topology-free, see
+checkpoint.store).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.launch.mesh import make_mesh
+
+
+def plan_mesh(n_devices: int, model_size: int = 16,
+              prefer_pods: bool = True) -> tuple[tuple, tuple]:
+    """Largest (pod, data, model) grid with the fixed model axis."""
+    if n_devices < model_size:
+        raise ValueError(
+            f"cannot keep TP={model_size} with only {n_devices} devices")
+    dp = n_devices // model_size
+    if prefer_pods and dp % 2 == 0 and dp >= 32:
+        return (2, dp // 2, model_size), ("pod", "data", "model")
+    return (dp, model_size), ("data", "model")
+
+
+def remesh(available_devices=None, model_size: int = 16):
+    devs = available_devices if available_devices is not None else jax.devices()
+    shape, axes = plan_mesh(len(devs), model_size)
+    import numpy as np
+
+    grid = np.asarray(devs)[:int(np.prod(shape))].reshape(shape)
+    return jax.sharding.Mesh(grid, axes)
+
+
+def reshard_state(state, specs, new_mesh):
+    from repro.launch.shard import named
+
+    shardings = named(specs, new_mesh)
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), state, shardings)

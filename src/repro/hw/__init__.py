@@ -1,0 +1,10 @@
+"""Device models: the hardware parameters that drive tiling, fusion-capacity
+checks and the cycle simulator.
+
+The paper's accelerator (Angel-Eye-derived, ZU2/ZU9) and our TPU v5e target are
+described by the same small set of numbers, so the whole compiler stack is
+hardware-parameterized (DESIGN.md §2).
+"""
+from repro.hw.device import DeviceModel, ZU2, ZU9, TPU_V5E, get_device
+
+__all__ = ["DeviceModel", "ZU2", "ZU9", "TPU_V5E", "get_device"]

@@ -1,0 +1,1 @@
+from repro.kernels.conv_fused.ops import fused_conv_block, supports  # noqa: F401

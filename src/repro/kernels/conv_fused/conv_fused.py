@@ -1,0 +1,179 @@
+"""Pallas TPU kernel: fused int8 conv (+bias+requant+ReLU) (+maxpool|+eltwise).
+
+This is the paper's fused-operation executed as ONE on-chip program — the
+LOAD/CONV/POOL/MISC/SAVE pipeline of Fig. 8/9 mapped to the TPU:
+
+* LOAD  -> Pallas grid DMA: the BlockSpecs below stage the padded input
+           image, the weight panel for the current oc tile and the bias slice
+           into VMEM (double-buffered across grid steps by the Pallas
+           pipeline, the analogue of the paper's instruction-level overlap);
+* CONV  -> MXU matmuls: conv is computed as kh*kw shifted patch-matmuls
+           ((TH*OW, IC) @ (IC, TOC)) accumulated in int32 VMEM registers —
+           the TPU-native rethinking of the FPGA MAC-array loop nest
+           (DESIGN.md §2, adaptation note 1);
+* MISC  -> the requantize (+ReLU) and the optional fused tail (maxpool or
+           eltwise-add on a DMA'd side input) run on the VPU over the tile
+           still resident in VMEM — the intermediate NEVER touches HBM;
+* SAVE  -> the output BlockSpec writes the finished int8 tile back.
+
+Tiling contract (chosen by ops.py, validated against the tiling solver):
+grid = (N, OH_t, OC_t); each cell produces the FINAL tile (TH, OW, TOC) —
+when pooling is fused, TH/OW are pool-output rows/cols and the conv stage
+computes the pool's receptive rows (recompute overlap when pool stride <
+kernel, documented).  Strided input rows are fetched with the
+slice-then-reshape trick so all indexing is lane-aligned.
+
+MXU alignment: TOC should be a multiple of 128 and TH*OW a multiple of 8 for
+peak efficiency on real hardware; correctness does not depend on it and the
+interpret-mode tests sweep ragged shapes too.
+
+Numerics are EXACTLY ``int8_ops``: int32 accumulate, round-half-away shift,
+saturate — the validation bench (validate.py) enforces bit-equality.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _round_shift(x, s: int):
+    if s == 0:
+        return x
+    if s < 0:
+        return x << (-s)
+    ax = jnp.abs(x)
+    r = (ax + (1 << (s - 1))) >> s
+    return jnp.sign(x) * r
+
+
+def _sat8(x):
+    return jnp.clip(x, -128, 127).astype(jnp.int8)
+
+
+def _conv_tile(x_ref, w_ref, b_ref, *, kh, kw, sh, sw, th_c, ow_c, row0):
+    """int32 conv accumulator for th_c x ow_c x TOC starting at out-row row0."""
+    toc = w_ref.shape[-1]
+    ic = w_ref.shape[-2]
+    acc = jnp.zeros((th_c * ow_c, toc), jnp.int32)
+    for dh in range(kh):
+        for dw in range(kw):
+            # rows row0*sh+dh .. step sh, th_c of them  (slice-reshape stride)
+            rows = x_ref[0, pl.dslice(row0 * sh + dh, th_c * sh)]
+            rows = rows.reshape(th_c, sh, *rows.shape[1:])[:, 0]
+            cols = jax.lax.slice_in_dim(rows, dw, dw + ow_c * sw, axis=1)
+            cols = cols.reshape(th_c, ow_c, sw, ic)[:, :, 0]
+            patch = cols.reshape(th_c * ow_c, ic).astype(jnp.int32)
+            wmat = w_ref[dh, dw].astype(jnp.int32)
+            acc = acc + jnp.dot(patch, wmat, preferred_element_type=jnp.int32)
+    return (acc + b_ref[...].astype(jnp.int32)[None, :]).reshape(th_c, ow_c, toc)
+
+
+def _kernel_plain(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sh, sw, th, ow,
+                  shift, relu):
+    r0 = pl.program_id(1) * th
+    acc = _conv_tile(x_ref, w_ref, b_ref, kh=kh, kw=kw, sh=sh, sw=sw,
+                     th_c=th, ow_c=ow, row0=r0)
+    y = _round_shift(acc, shift)
+    if relu:
+        y = jnp.maximum(y, 0)
+    o_ref[0] = _sat8(y)
+
+
+def _kernel_pool(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sh, sw, th, ow,
+                 shift, relu, kp, sp, ow_c):
+    # th/ow are POOL-output tile dims; conv stage covers the receptive rows
+    th_c = (th - 1) * sp + kp
+    r0 = pl.program_id(1) * th * sp  # conv out-row of this pool tile's top
+    acc = _conv_tile(x_ref, w_ref, b_ref, kh=kh, kw=kw, sh=sh, sw=sw,
+                     th_c=th_c, ow_c=ow_c, row0=r0)
+    y = _round_shift(acc, shift)
+    if relu:
+        y = jnp.maximum(y, 0)
+    y = jnp.clip(y, -128, 127)
+    # maxpool on the resident tile (VPU stage) — window max via shifted slices
+    toc = y.shape[-1]
+    best = jnp.full((th, ow, toc), -(2 ** 31 - 1), jnp.int32)
+    for ph in range(kp):
+        for pw_ in range(kp):
+            win = jax.lax.slice(y, (ph, pw_, 0),
+                                (ph + (th - 1) * sp + 1, pw_ + (ow - 1) * sp + 1, toc),
+                                (sp, sp, 1))
+            best = jnp.maximum(best, win)
+    o_ref[0] = best.astype(jnp.int8)
+
+
+def _kernel_eltwise(x_ref, w_ref, b_ref, side_ref, o_ref, *, kh, kw, sh, sw,
+                    th, ow, shift, relu, s_conv, s_side, relu_out):
+    r0 = pl.program_id(1) * th
+    acc = _conv_tile(x_ref, w_ref, b_ref, kh=kh, kw=kw, sh=sh, sw=sw,
+                     th_c=th, ow_c=ow, row0=r0)
+    y = _round_shift(acc, shift)          # conv result at its own fraction
+    if relu:
+        y = jnp.maximum(y, 0)
+    y = jnp.clip(y, -128, 127)
+    # eltwise-add: rescale both operands to the output fraction, add, saturate
+    side = side_ref[0].astype(jnp.int32)
+    z = _round_shift(y, s_conv) + _round_shift(side, s_side)
+    if relu_out:
+        z = jnp.maximum(z, 0)
+    o_ref[0] = _sat8(z)
+
+
+def fused_conv_pallas(x_pad, w, b, *, stride, shift, relu,
+                      th, toc, oh, ow, pool=None, eltwise=None,
+                      interpret=True):
+    """Launch the fused kernel.
+
+    x_pad: (N, Hp, Wp, IC) int8, already padded (pad is fused into LOAD,
+           paper §4.1.1).  w: (KH, KW, IC, OC) int8.  b: (OC,) int32.
+    pool:  None | (kp, sp)   — fused maxpool tail.
+    eltwise: None | (side_array int8 (N,OH,OW,OC), s_conv, s_side, relu_out).
+    th/toc: tile rows (of the FINAL output) and oc tile; must divide oh/oc.
+    """
+    n, hp, wp, ic = x_pad.shape
+    kh, kw, _, oc = w.shape
+    sh, sw = stride
+    if pool is not None:
+        kp, sp = pool
+        oh_f, ow_f = oh, ow               # pool-output dims
+        ow_c = (ow - 1) * sp + kp         # conv cols needed
+        kern = functools.partial(_kernel_pool, kh=kh, kw=kw, sh=sh, sw=sw,
+                                 th=th, ow=ow_f, shift=shift, relu=relu,
+                                 kp=kp, sp=sp, ow_c=ow_c)
+    elif eltwise is not None:
+        _, s_conv, s_side, relu_out = eltwise
+        oh_f, ow_f = oh, ow
+        kern = functools.partial(_kernel_eltwise, kh=kh, kw=kw, sh=sh, sw=sw,
+                                 th=th, ow=ow_f, shift=shift, relu=relu,
+                                 s_conv=s_conv, s_side=s_side, relu_out=relu_out)
+    else:
+        oh_f, ow_f = oh, ow
+        kern = functools.partial(_kernel_plain, kh=kh, kw=kw, sh=sh, sw=sw,
+                                 th=th, ow=ow_f, shift=shift, relu=relu)
+
+    grid = (n, oh_f // th, oc // toc)
+    in_specs = [
+        # full padded image per batch element (T_w = full width, paper Eq. 5)
+        pl.BlockSpec((1, hp, wp, ic), lambda i, j, k: (i, 0, 0, 0)),
+        pl.BlockSpec((kh, kw, ic, toc), lambda i, j, k: (0, 0, 0, k)),
+        pl.BlockSpec((toc,), lambda i, j, k: (k,)),
+    ]
+    args = [x_pad, w, b]
+    if eltwise is not None:
+        side = eltwise[0]
+        in_specs.append(pl.BlockSpec((1, th, ow_f, toc),
+                                     lambda i, j, k: (i, j, 0, k)))
+        args.append(side)
+    out_spec = pl.BlockSpec((1, th, ow_f, toc), lambda i, j, k: (i, j, 0, k))
+    fn = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n, oh_f, ow_f, oc), jnp.int8),
+        interpret=interpret,
+    )
+    return fn(*args)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused conv kernel.
+
+Composes the canonical ``int8_ops`` semantics exactly as the unfused executor
+would — the kernel must match this bit-for-bit (validate.py / kernel tests).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import int8_ops
+
+
+def fused_conv_ref(x, w, b, *, stride, pad, shift, relu,
+                   pool=None, eltwise=None):
+    """x (N,H,W,IC) int8 unpadded; w (KH,KW,IC,OC) int8; b (OC,) int32.
+
+    pool:    None | (kp, sp)  fused maxpool (VALID, no ceil extension).
+    eltwise: None | (side int8 at OH/OW/OC, s_conv, s_side, relu_out).
+    """
+    y = int8_ops.conv2d(x, w, b, stride=stride, pad=pad, shift=shift, relu=relu)
+    if pool is not None:
+        kp, sp = pool
+        y = int8_ops.maxpool(y, kernel=(kp, kp), stride=(sp, sp), pad=(0, 0),
+                             ceil_mode=False)
+    if eltwise is not None:
+        side, s_conv, s_side, relu_out = eltwise
+        acc = (int8_ops.round_shift(y.astype(jnp.int32), s_conv)
+               + int8_ops.round_shift(side.astype(jnp.int32), s_side))
+        if relu_out:
+            acc = jnp.maximum(acc, 0)
+        y = int8_ops.sat8(acc)
+    return y

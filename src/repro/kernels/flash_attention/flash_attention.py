@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: causal flash attention (online softmax).
+
+This is the DNNVM story on the transformer side (DESIGN.md §3): the
+``attn_score -> softmax -> attn_out`` subgraph is a *kernel-fusion group*
+whose unfused form materializes an S x S score matrix in HBM — failing the
+paper's fusion condition 1 — while the fused form streams KV blocks through
+VMEM with online max/sum renormalization.  The lm_bridge planner picks this
+kernel exactly when the blocked working set fits the VMEM budget.
+
+Tiling: grid = (batch*kv_heads, q_blocks); each cell owns one q tile
+(BLK_Q x d) for one kv-head group and loops over kv blocks with
+``jax.lax.fori_loop``, keeping the running (m, l, acc) statistics in VMEM
+registers.  Causality skips kv blocks strictly above the diagonal.
+Block sizes default to 128 (MXU-aligned); d is the full head_dim.
+
+Numerics: fp32 softmax statistics, input-dtype matmuls (bf16 on TPU),
+matching the jnp oracle in ref.py to ~1e-2 bf16 / 1e-5 fp32.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, *, blk_q, blk_k, n_k, scale,
+            q_offset, causal):
+    # q_ref: (1, blk_q, g, d) one q block for one kv head (g = group heads)
+    # k_ref/v_ref: (1, S_k, d) the full kv stream for this head
+    qi = pl.program_id(1)
+    q = q_ref[0]                                       # (blk_q, g, d)
+    bq, g, d = q.shape
+    q2 = (q * scale).reshape(bq * g, d).astype(jnp.float32)
+
+    m0 = jnp.full((bq * g,), NEG, jnp.float32)
+    l0 = jnp.zeros((bq * g,), jnp.float32)
+    a0 = jnp.zeros((bq * g, d), jnp.float32)
+
+    q_start = qi * blk_q + q_offset                    # absolute q positions
+
+    def body(ki, carry):
+        m, l, acc = carry
+        k = k_ref[0, pl.dslice(ki * blk_k, blk_k)].astype(jnp.float32)
+        v = v_ref[0, pl.dslice(ki * blk_k, blk_k)].astype(jnp.float32)
+        s = q2 @ k.T                                   # (bq*g, blk_k)
+        if causal:
+            qpos = q_start + jnp.repeat(
+                jax.lax.iota(jnp.int32, bq), g, total_repeat_length=bq * g)
+            kpos = ki * blk_k + jax.lax.iota(jnp.int32, blk_k)
+            s = jnp.where(kpos[None, :] <= qpos[:, None], s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[:, None] + p @ v
+        return m_new, l_new, acc_new
+
+    if causal:
+        # kv blocks strictly above the diagonal contribute nothing
+        last = jnp.minimum(
+            n_k, (q_start + blk_q + blk_k - 1) // blk_k).astype(jnp.int32)
+    else:
+        last = n_k
+    m, l, acc = jax.lax.fori_loop(0, last, body, (m0, l0, a0))
+    out = acc / jnp.maximum(l, 1e-30)[:, None]
+    o_ref[0] = out.reshape(bq, g, d).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, blk_q=128, blk_k=128, q_offset=0,
+                           causal=True, interpret=True):
+    """q (B,Sq,H,D); k/v (B,Sk,KV,D), H % KV == 0.  Returns (B,Sq,H,D)."""
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    blk_q = min(blk_q, sq)
+    blk_k = min(blk_k, sk)
+    assert sq % blk_q == 0 and sk % blk_k == 0
+    # layout: (B*KV, Sq, g, d) so one grid row owns one kv head's stream
+    qr = q.reshape(b, sq, kv, g, d).transpose(0, 2, 1, 3, 4) \
+          .reshape(b * kv, sq, g, d)
+    kr = k.transpose(0, 2, 1, 3).reshape(b * kv, sk, d)
+    vr = v.transpose(0, 2, 1, 3).reshape(b * kv, sk, d)
+    grid = (b * kv, sq // blk_q)
+    kern = functools.partial(
+        _kernel, blk_q=blk_q, blk_k=blk_k, n_k=sk // blk_k,
+        scale=1.0 / d ** 0.5, q_offset=q_offset, causal=causal)
+    out = pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, blk_q, g, d), lambda i, j: (i, j, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, sk, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, g, d), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, sq, g, d), q.dtype),
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(b, kv, sq, g, d).transpose(0, 2, 1, 3, 4) \
+              .reshape(b, sq, h, d)

@@ -1,0 +1,17 @@
+"""jit'd wrapper for the flash-attention kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_pallas
+
+
+@partial(jax.jit, static_argnames=("q_offset", "causal", "blk_q", "blk_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, q_offset=0, causal=True, blk_q=128,
+                    blk_k=128, interpret=True):
+    return flash_attention_pallas(q, k, v, blk_q=blk_q, blk_k=blk_k,
+                                  q_offset=q_offset, causal=causal,
+                                  interpret=interpret)

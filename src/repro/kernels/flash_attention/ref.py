@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for flash attention: unfused softmax(QK^T)V — the exact
+computation the fused kernel must reproduce (it materializes the S x S score
+matrix, which is why it fails DNNVM's fusion condition 1 at long S)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def attention_ref(q, k, v, *, q_offset=0, causal=True):
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    s *= 1.0 / d ** 0.5
+    if causal:
+        qpos = jnp.arange(sq) + q_offset
+        kpos = jnp.arange(sk)
+        mask = kpos[None, :] <= qpos[:, None]
+        s = jnp.where(mask[None, None, None], s, NEG)
+    w = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return o.reshape(b, sq, h, d)

@@ -1,0 +1,13 @@
+"""jit'd wrapper for the chunked SSM-scan kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels.ssm_scan.ssm_scan import ssm_scan_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(q, k, v, log_a, *, chunk=128, interpret=True):
+    return ssm_scan_pallas(q, k, v, log_a, chunk=chunk, interpret=interpret)

@@ -1,0 +1,35 @@
+"""Oracles for the SSM scan kernel.
+
+``chunked_ref`` is the production jnp implementation; ``sequential_ref`` is
+the definitionally-true O(S) recurrence both must match."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn.recurrent import chunked_linear_scan
+
+
+def chunked_ref(q, k, v, log_a, chunk=128):
+    y, _ = chunked_linear_scan(q, k, v, log_a, chunk=chunk)
+    return y
+
+
+def sequential_ref(q, k, v, log_a):
+    """Step-by-step recurrence: S_t = a_t S_{t-1} + k_t v_t^T; y = S^T q."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+
+    def step(S, xs):
+        qt, kt, vt, lat = xs                      # (B,H,K),(B,H,K),(B,H,V),(B,H)
+        a = jnp.exp(lat.astype(jnp.float32))[..., None, None]
+        S = a * S + jnp.einsum("bhk,bhv->bhkv", kt.astype(jnp.float32),
+                               vt.astype(jnp.float32))
+        y = jnp.einsum("bhk,bhkv->bhv", qt.astype(jnp.float32), S)
+        return S, y
+
+    xs = (q.transpose(1, 0, 2, 3), k.transpose(1, 0, 2, 3),
+          v.transpose(1, 0, 2, 3), log_a.transpose(1, 0, 2))
+    S0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(v.dtype)

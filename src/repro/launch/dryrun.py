@@ -1,0 +1,225 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede any jax-importing import: jax locks the device count on init.
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and record memory/cost/collective receipts.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --all
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-8b \
+        --shape train_4k --mesh pod
+
+Artifacts land in benchmarks/results/dryrun/<arch>__<shape>__<mesh>.json and
+feed the §Roofline analysis (benchmarks/roofline.py).
+"""
+import argparse
+import dataclasses
+import gc
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.configs.base import SHAPES
+from repro.launch import shard
+from repro.launch.hlo_analysis import collective_stats
+from repro.launch.mesh import data_axes, make_production_mesh, mesh_dims
+from repro.launch.serve import make_prefill_step, make_serve_step
+from repro.launch.train import abstract_state, make_train_step, state_specs
+from repro.models import api
+from repro.nn import flags as nn_flags
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+
+def grad_accum_for(cfg, shape) -> int:
+    """Microbatch count: the §Perf memory-feasibility boundary (with the
+    dots remat policy, activations per live microbatch must keep temp bytes
+    under the 16 GB v5e HBM — granite@ga=16 measures 13.5 GiB/device)."""
+    if shape.kind != "train":
+        return 1
+    if cfg.d_model >= 8192:
+        return 64
+    if cfg.d_model >= 3072:
+        return 16
+    return 8
+
+
+# ------------------------------------------------------- layer-group secant
+def _group_unit(cfg) -> int:
+    """Layers per repeating structural unit."""
+    if cfg.family == "ssm":
+        return cfg.slstm_every or 1
+    if cfg.family == "hybrid":
+        return cfg.shared_attn_every or 1
+    return 1
+
+
+def _with_units(cfg, n_units: int):
+    g = _group_unit(cfg)
+    L = n_units * g
+    if cfg.family == "audio":
+        return dataclasses.replace(cfg, n_layers=L, enc_layers=L)
+    return dataclasses.replace(cfg, n_layers=L)
+
+
+def _units_full(cfg) -> float:
+    return cfg.n_layers / _group_unit(cfg)
+
+
+def _compile_cell(cfg, shape, mesh, ga: int):
+    """Lower + compile one step for (cfg, shape) on mesh.  Returns compiled."""
+    specs_in = api.input_specs(cfg, shape)
+    bspecs = shard.named(shard.batch_specs(specs_in, mesh), mesh)
+    if shape.kind == "train":
+        st_abs = abstract_state(cfg)
+        st_specs = shard.named(state_specs(st_abs, mesh), mesh)
+        gs = os.environ.get("REPRO_GRAD_SYNC", "auto")
+        step = make_train_step(cfg, grad_accum=ga,
+                               grad_dtype=("bfloat16" if cfg.d_model >= 8192
+                                           else "float32"),
+                               grad_sync=gs, mesh=mesh if gs == "late" else None)
+        jitted = jax.jit(step, in_shardings=(st_specs, bspecs),
+                         donate_argnums=(0,))
+        return jitted.lower(st_abs, specs_in)
+    if shape.kind == "prefill":
+        p_abs = api.abstract_params(cfg)
+        p_specs = shard.named(shard.param_specs(p_abs, mesh), mesh)
+        jitted = jax.jit(make_prefill_step(cfg), in_shardings=(p_specs, bspecs))
+        return jitted.lower(p_abs, specs_in)
+    # decode
+    p_abs = api.abstract_params(cfg)
+    p_specs = shard.named(shard.param_specs(p_abs, mesh), mesh)
+    c_abs = api.abstract_cache(cfg, shape.global_batch, shape.seq_len)
+    c_specs = shard.named(shard.cache_specs(c_abs, cfg, mesh), mesh)
+    tok_spec = shard.named(
+        shard.batch_specs(specs_in["tokens"], mesh), mesh)
+    pos_spec = shard.named(jax.sharding.PartitionSpec(), mesh)
+    jitted = jax.jit(make_serve_step(cfg),
+                     in_shardings=(p_specs, c_specs, tok_spec, pos_spec),
+                     donate_argnums=(1,))
+    return jitted.lower(p_abs, c_abs, specs_in["tokens"], specs_in["pos"])
+
+
+def _cost_of(compiled) -> tuple[float, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0))
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             measure: bool = True) -> dict:
+    cfg = configs.get(arch)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "n_devices": int(mesh.devices.size), "kind": shape.kind,
+           "status": "ok"}
+    ga = grad_accum_for(cfg, shape)
+    rec["grad_accum"] = ga
+    with jax.set_mesh(mesh):
+        # ---- production compile: memory receipts + loop-aware collectives
+        t0 = time.time()
+        lowered = _compile_cell(cfg, shape, mesh, ga)
+        rec["lower_s"] = round(time.time() - t0, 2)
+        t1 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t1, 2)
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(ma, k, None)
+            if v is not None:
+                rec[k] = int(v)
+        rec["hlo_flops_body"], rec["hlo_bytes_body"] = _cost_of(compiled)
+        rec["collectives"] = collective_stats(compiled.as_text())
+        del compiled, lowered
+
+        # ---- measurement compiles: L=1/L=2-unit secant => loop-aware totals
+        if measure:
+            nn_flags.MEASURE = True
+            try:
+                f, b = {}, {}
+                for n_units in (1, 2):
+                    c = _with_units(cfg, n_units)
+                    lw = _compile_cell(c, shape, mesh, ga=1)
+                    comp = lw.compile()
+                    f[n_units], b[n_units] = _cost_of(comp)
+                    del comp, lw
+                u = _units_full(cfg)
+                rec["hlo_flops"] = f[1] + (f[2] - f[1]) * (u - 1)
+                rec["hlo_bytes"] = b[1] + (b[2] - b[1]) * (u - 1)
+                rec["secant"] = {"f1": f[1], "f2": f[2], "b1": b[1],
+                                 "b2": b[2], "units": u}
+            finally:
+                nn_flags.MEASURE = False
+    return rec
+
+
+def save(rec: dict) -> str:
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    path = os.path.join(
+        RESULTS_DIR, f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return path
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--mesh", choices=("pod", "multipod", "both"),
+                    default="both")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for name, cfg in configs.ARCHS.items():
+            for sh in configs.shapes_for(cfg):
+                meshes = (("pod", "multipod") if args.mesh == "both"
+                          else (args.mesh,))
+                for mk in meshes:
+                    cells.append((name, sh, mk))
+    else:
+        meshes = (("pod", "multipod") if args.mesh == "both" else (args.mesh,))
+        for mk in meshes:
+            cells.append((args.arch, args.shape, mk))
+
+    ok = fail = skipped = 0
+    for arch, sh, mk in cells:
+        path = os.path.join(RESULTS_DIR, f"{arch}__{sh}__{mk}.json")
+        if args.skip_existing and os.path.exists(path):
+            with open(path) as f:
+                if json.load(f).get("status") == "ok":
+                    skipped += 1
+                    continue
+        try:
+            rec = run_cell(arch, sh, mk)
+            ok += 1
+        except Exception as e:
+            rec = {"arch": arch, "shape": sh, "mesh": mk, "status": "error",
+                   "error": f"{type(e).__name__}: {e}",
+                   "trace": traceback.format_exc()[-2000:]}
+            fail += 1
+        save(rec)
+        print(f"[{ok+fail+skipped}/{len(cells)}] {arch:24s} {sh:12s} {mk:8s} "
+              f"{rec['status']}"
+              + (f"  compile={rec.get('compile_s')}s "
+                 f"flops={rec.get('hlo_flops', 0):.3g} "
+                 f"coll={rec.get('collectives', {}).get('total_bytes', 0):.3g}B"
+                 if rec["status"] == "ok" else f"  {rec.get('error', '')[:120]}"))
+        gc.collect()
+    print(f"done: {ok} ok, {fail} failed, {skipped} skipped")
+    if fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Serving steps: prefill (logits over a full prompt batch) and decode
+(one token against the KV/SSM state), plus a small batched-request driver.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get as get_cfg
+from repro.configs.base import ArchConfig
+from repro.models import api
+
+
+def make_prefill_step(cfg: ArchConfig):
+    from repro.nn import encdec, model, xlstm, zamba
+
+    def prefill(params, batch):
+        if cfg.family == "audio":
+            enc_out = encdec.encode(cfg, params, batch["frames"])
+            return encdec.decode_train(cfg, params, enc_out, batch["tokens"])
+        if cfg.family == "ssm":
+            return xlstm.forward(cfg, params, batch["tokens"])[0]
+        if cfg.family == "hybrid":
+            return zamba.forward(cfg, params, batch["tokens"])[0]
+        return model.forward(cfg, params, batch["tokens"],
+                             batch.get("patch_embeds"))[0]
+
+    return prefill
+
+
+def make_serve_step(cfg: ArchConfig):
+    def serve_step(params, cache, tokens, pos):
+        logits, cache = api.decode_step(cfg, params, cache, tokens, pos)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, cache
+
+    return serve_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_cfg(args.arch)
+    if args.smoke:
+        cfg = cfg.smoke()
+    params = api.init_params(cfg)
+    B = args.batch
+    max_len = args.prompt_len + args.gen_len
+    cache = api.init_cache(cfg, B, max_len)
+    serve = jax.jit(make_serve_step(cfg), donate_argnums=(1,))
+
+    import numpy as np
+
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab, (B, args.prompt_len)).astype("int32")
+    # prefill via repeated decode (teacher-forced) — exercises the cache path
+    tok = jnp.asarray(prompt[:, 0])
+    t0 = time.perf_counter()
+    for p in range(args.prompt_len - 1):
+        _, cache = serve(params, cache, jnp.asarray(prompt[:, p]),
+                         jnp.int32(p))
+    out = []
+    tok = jnp.asarray(prompt[:, -1])
+    for p in range(args.prompt_len - 1, max_len - 1):
+        tok, cache = serve(params, cache, tok, jnp.int32(p))
+        out.append(np.asarray(tok))
+    dt = time.perf_counter() - t0
+    toks = (max_len - 1) * B
+    print(f"generated {len(out)} steps x {B} seqs "
+          f"({toks / dt:.1f} tok/s incl. prefill-by-decode)")
+    print("sample:", np.stack(out, 1)[0][:16])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,145 @@
+"""Sharding rules: PartitionSpecs for params, optimizer state, caches and
+batches on the ("pod",) "data" x "model" mesh.
+
+Strategy (DESIGN.md §4): DP over ("pod","data"); TP over "model" — each
+parameter shards its largest model-divisible dimension (preferring trailing
+dims, the contraction-friendly choice); norms and other small vectors
+replicate.  ZeRO-1: optimizer moments additionally shard one remaining
+dimension over "data".  Non-divisible cases (smollm's 15 heads, mixtral's 8
+experts) fall back to replication of that dim — recorded per-arch in
+DESIGN.md §5.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.launch.mesh import data_axes, mesh_dims
+
+_REPLICATED_HINTS = ("ln", "bias", "a_log", "b_gates")
+
+
+def _is_replicated(path: str) -> bool:
+    leaf = path.split("/")[-1]
+    return any(leaf.startswith(h) or leaf == h for h in _REPLICATED_HINTS)
+
+
+def _stacked_dims(path: str) -> int:
+    """Leading stacking axes (layer stacks, LoRA application stacks) that we
+    keep unsharded for scan slicing."""
+    top = path.split("/")[0]
+    return 1 if top in ("layers", "mlstm", "slstm", "mamba", "enc", "dec",
+                        "lora") else 0
+
+
+# Megatron row-parallel weights: shard the CONTRACTION (input) dim so the
+# matmul reduces with one small activation all-reduce — sharding their output
+# dim instead makes XLA all-gather the whole weight per use (a 3.5 GB/layer
+# gather for llama w2; §Perf iteration 5).
+_ROW_PARALLEL = {"w2", "wo", "w_down", "w_out", "xwo"}
+
+
+def param_spec(path: str, shape: tuple, model_size: int) -> P:
+    if _is_replicated(path) or len(shape) <= 1:
+        return P()
+    leaf = path.split("/")[-1]
+    if leaf in ("embed", "unembed") and shape[0] % model_size == 0:
+        # vocab-parallel (Megatron-style): logits reduce over shards instead
+        # of gathering the table
+        return P("model", *([None] * (len(shape) - 1)))
+    lead = min(_stacked_dims(path), len(shape) - 1)
+    dims = list(range(len(shape)))[lead:]
+    order = list(reversed(dims))
+    if leaf in _ROW_PARALLEL and len(dims) >= 2:
+        order = [dims[-2], dims[-1]] + list(reversed(dims[:-2]))
+    for d in order:
+        if shape[d] % model_size == 0 and shape[d] >= model_size:
+            spec = [None] * len(shape)
+            spec[d] = "model"
+            return P(*spec)
+    return P()
+
+
+def zero1_spec(pspec: P, shape: tuple, data_size: int, path: str = "") -> P:
+    """Optimizer-moment spec: param spec + shard one more dim over "data"."""
+    spec = list(pspec) + [None] * (len(shape) - len(pspec))
+    for d in reversed(range(len(shape))):
+        if spec[d] is None and shape[d] % data_size == 0 and shape[d] >= data_size:
+            spec[d] = "data"
+            return P(*spec)
+    return P(*spec)
+
+
+def _tree_paths(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    paths = ["/".join(str(getattr(k, "key", getattr(k, "idx", k)))
+                      for k in path) for path, _ in flat]
+    leaves = [l for _, l in flat]
+    return paths, leaves, treedef
+
+
+def param_specs(params_abstract, mesh) -> object:
+    msize = mesh_dims(mesh).get("model", 1)
+    paths, leaves, treedef = _tree_paths(params_abstract)
+    specs = [param_spec(p, l.shape, msize) for p, l in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def moment_specs(params_abstract, mesh) -> object:
+    md = mesh_dims(mesh)
+    msize, dsize = md.get("model", 1), md.get("data", 1)
+    paths, leaves, treedef = _tree_paths(params_abstract)
+    specs = [zero1_spec(param_spec(p, l.shape, msize), l.shape, dsize, p)
+             for p, l in zip(paths, leaves)]
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+def batch_specs(batch_abstract, mesh) -> object:
+    dp = data_axes(mesh)
+    md = mesh_dims(mesh)
+    dp_size = int(np.prod([md[a] for a in dp])) if dp else 1
+
+    def spec(l):
+        if l.ndim == 0 or l.shape[0] % dp_size or l.shape[0] < dp_size:
+            return P(*([None] * l.ndim))
+        return P(dp, *([None] * (l.ndim - 1)))
+
+    return jax.tree.map(spec, batch_abstract)
+
+
+def cache_specs(cache_abstract, cfg, mesh) -> object:
+    """KV caches (L,B,S,KV,D) / SSM states (L,B,H,K,V): batch over data axes;
+    the kv-head dim over "model" when divisible, otherwise the sequence /
+    state dim — sequence-sharded KV decodes flash-decode style (partial
+    softmax + small all-reduce), which XLA SPMD materializes from these
+    constraints (DESIGN.md §4)."""
+    md = mesh_dims(mesh)
+    msize = md.get("model", 1)
+    dp = data_axes(mesh)
+    dp_size = int(np.prod([md[a] for a in dp])) if dp else 1
+
+    def spec(l):
+        s = [None] * l.ndim
+        batch_sharded = (l.ndim >= 2 and l.shape[1] % dp_size == 0
+                         and l.shape[1] >= dp_size)
+        if batch_sharded:
+            s[1] = dp          # (L, B, ...)
+        if l.ndim >= 4 and l.shape[3] % msize == 0 and l.shape[3] >= msize:
+            s[3] = "model"     # kv heads / ssm K dim
+            if not batch_sharded and dp and l.shape[2] % dp_size == 0 \
+                    and l.shape[2] >= dp_size:
+                # batch too small (long_500k decode): shard the sequence over
+                # the idle data axes — flash-decode partial softmax + small
+                # all-reduce (§Perf iteration: zamba2 long_500k)
+                s[2] = dp
+        elif l.ndim >= 4 and l.shape[2] % msize == 0 and l.shape[2] >= msize:
+            s[2] = "model"     # sequence (KV cache) / head state dim
+        return P(*s)
+
+    return jax.tree.map(spec, cache_abstract)
+
+
+def named(tree_specs, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree_specs,
+                        is_leaf=lambda x: isinstance(x, P))

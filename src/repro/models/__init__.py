@@ -1,0 +1,4 @@
+from repro.models.api import (  # noqa: F401
+    abstract_params, decode_step, init_cache, init_params, input_specs,
+    loss_fn,
+)

@@ -1,0 +1,99 @@
+"""Family dispatcher: one API over all assigned architectures.
+
+* ``init_params(cfg, rng)``        real arrays (smoke tests / training)
+* ``abstract_params(cfg)``         ShapeDtypeStructs (dry-run; no allocation)
+* ``loss_fn(cfg, params, batch)``  scalar LM loss
+* ``init_cache / decode_step``     serving path (one token, KV/SSM state)
+* ``input_specs(cfg, shape)``      ShapeDtypeStruct stand-ins for every model
+                                   input of an (arch x shape) cell
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCfg
+from repro.nn import encdec, model, xlstm, zamba
+
+ENC_FRACTION = {  # seamless: encoder/decoder split of seq_len per shape kind
+    "train": 0.5, "prefill": 0.875, "decode": None,
+}
+SEAMLESS_DECODE_ENC_LEN = 4096
+
+
+def _mod(cfg: ArchConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return model
+    if cfg.family == "ssm":
+        return xlstm
+    if cfg.family == "hybrid":
+        return zamba
+    if cfg.family == "audio":
+        return encdec
+    raise ValueError(f"unknown family {cfg.family}")
+
+
+def init_params(cfg: ArchConfig, rng=None):
+    rng = rng if rng is not None else jax.random.PRNGKey(0)
+    return _mod(cfg).init_params(cfg, rng)
+
+
+def abstract_params(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    return _mod(cfg).loss_fn(cfg, params, batch)
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    if cfg.family == "audio":
+        return encdec.init_cache(cfg, batch, max_len, SEAMLESS_DECODE_ENC_LEN)
+    return _mod(cfg).init_cache(cfg, batch, max_len)
+
+
+def abstract_cache(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    return _mod(cfg).decode_step(cfg, params, cache, tokens, pos)
+
+
+# ------------------------------------------------------------- input specs
+def input_specs(cfg: ArchConfig, shape: ShapeCfg) -> dict:
+    """ShapeDtypeStruct stand-ins for one (arch x shape) cell.
+
+    train/prefill: the token/frame batch (modality stubs included);
+    decode: one token per sequence + the absolute position scalar (the KV
+    cache is part of the serve state, see abstract_cache)."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    if shape.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            frac = ENC_FRACTION[shape.kind]
+            se = int(S * frac)
+            sd = S - se
+            return {
+                "frames": jax.ShapeDtypeStruct((B, se, cfg.d_model), jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((B, sd), i32),
+                "labels": jax.ShapeDtypeStruct((B, sd), i32),
+            }
+        if cfg.family == "vlm":
+            npat = min(cfg.n_patches, S // 2)
+            st = S - npat
+            return {
+                "patch_embeds": jax.ShapeDtypeStruct((B, npat, cfg.d_model),
+                                                     jnp.bfloat16),
+                "tokens": jax.ShapeDtypeStruct((B, st), i32),
+                "labels": jax.ShapeDtypeStruct((B, st), i32),
+            }
+        return {
+            "tokens": jax.ShapeDtypeStruct((B, S), i32),
+            "labels": jax.ShapeDtypeStruct((B, S), i32),
+        }
+    # decode: one new token against a seq_len-deep cache
+    return {
+        "tokens": jax.ShapeDtypeStruct((B,), i32),
+        "pos": jax.ShapeDtypeStruct((), i32),
+    }

@@ -1,0 +1,7 @@
+"""Pure-JAX NN substrate for the LM-family architectures.
+
+Models are pytrees of arrays + pure apply functions (no framework deps).
+``init_params(cfg, rng)`` builds real arrays for smoke tests / training;
+``abstract_params(cfg)`` builds ShapeDtypeStructs for the multi-pod dry-run
+(never allocates).
+"""

@@ -1,0 +1,150 @@
+"""GQA attention: full / causal / sliding-window, prefill and single-token
+decode with a KV cache, optional Pallas flash kernel for the score+softmax+
+value contraction (the DNNVM-planned fused group; DESIGN.md §3)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _split_heads(x, n_heads, d_head):
+    b, s, _ = x.shape
+    return x.reshape(b, s, n_heads, d_head)
+
+
+def qkv(x, p, n_heads, n_kv, d_head):
+    q = _split_heads(x @ p["wq"], n_heads, d_head)
+    k = _split_heads(x @ p["wk"], n_kv, d_head)
+    v = _split_heads(x @ p["wv"], n_kv, d_head)
+    return q, k, v
+
+
+def sdpa(q, k, v, *, causal: bool = True, window: int = 0,
+         q_offset: int = 0, impl: str = "xla", kv_len_mask=None):
+    """q (B,Sq,H,D), k/v (B,Sk,KV,D) with H % KV == 0.  Returns (B,Sq,H,D).
+
+    ``q_offset``: absolute position of q[0] (decode: Sk-1 or cache length).
+    ``kv_len_mask``: optional (B, Sk) validity mask (ragged decode caches).
+    """
+    if impl == "flash" and causal and window == 0 and kv_len_mask is None:
+        from repro.kernels.flash_attention import ops as flash
+
+        return flash.flash_attention(q, k, v, q_offset=q_offset)
+    if impl == "xla_chunked" and kv_len_mask is None:
+        return sdpa_chunked(q, k, v, causal=causal, window=window,
+                            q_offset=q_offset)
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, sq, kv, g, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    logits *= (1.0 / d ** 0.5)
+    qpos = jnp.arange(sq) + q_offset
+    kpos = jnp.arange(sk)
+    mask = jnp.ones((sq, sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None, None], logits, NEG)
+    if kv_len_mask is not None:
+        logits = jnp.where(kv_len_mask[:, None, None, None, :], logits, NEG)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, sq, h, d)
+
+
+def sdpa_chunked(q, k, v, *, causal=True, window=0, q_offset=0,
+                 blk: int = 1024):
+    """Flash-style attention in plain XLA ops: scan over KV blocks with
+    online max/sum renormalization — the S x S score matrix never exists as
+    a whole tensor (DNNVM kernel fusion, condition 1, realized without
+    Pallas so the multi-pod dry-run can lower it on any backend; the Pallas
+    kernel is the TPU-native twin).  §Perf iteration: smollm prefill_32k."""
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    if sk % blk or (causal and sq != sk) or window:
+        return sdpa(q, k, v, causal=causal, window=window, q_offset=q_offset,
+                    impl="xla")
+    g = h // kv
+    n = sk // blk
+    qg = (q.reshape(b, sq, kv, g, d) * (1.0 / d ** 0.5)).astype(q.dtype)
+    kc = k.reshape(b, n, blk, kv, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, n, blk, kv, d).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(sq) + q_offset
+
+    def body(carry, xs):
+        m, l, acc = carry
+        ki, kb, vb = xs
+        s = jnp.einsum("bqkgd,bskd->bkgqs", qg, kb).astype(jnp.float32)
+        if causal:
+            kpos = ki * blk + jnp.arange(blk)
+            s = jnp.where((kpos[None, :] <= qpos[:, None])[None, None, None],
+                          s, NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = alpha * l + jnp.sum(p, axis=-1)
+        acc_new = (acc * alpha[..., None]
+                   + jnp.einsum("bkgqs,bskd->bkgqd", p.astype(q.dtype),
+                                vb).astype(jnp.float32))
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, kv, g, sq), NEG, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, sq, d), jnp.float32)
+    from repro.nn import flags
+
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                  (jnp.arange(n), kc, vc),
+                                  unroll=flags.unroll_for(n))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, d).astype(q.dtype)
+
+
+def attn_out(o, p):
+    b, s, h, d = o.shape
+    return o.reshape(b, s, h * d) @ p["wo"]
+
+
+# ----------------------------------------------------------------- KV cache
+def cache_init(batch, max_len, n_kv, d_head, dtype):
+    return {
+        "k": jnp.zeros((batch, max_len, n_kv, d_head), dtype),
+        "v": jnp.zeros((batch, max_len, n_kv, d_head), dtype),
+    }
+
+
+def cache_update(cache, k_new, v_new, pos, window: int = 0):
+    """Insert one decode step at absolute position ``pos``.  With SWA the
+    cache is a rolling buffer of size ``window`` (slot = pos % window)."""
+    slot = (pos % window) if window else pos
+    k = jax.lax.dynamic_update_slice(cache["k"], k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache["v"], v_new, (0, slot, 0, 0))
+    return {"k": k, "v": v}
+
+
+def decode_attend(q, cache, pos, *, window: int = 0):
+    """Single-token decode: q (B,1,H,D) against the cache.
+
+    Full attention: attends to cache[:pos+1].  SWA: rolling buffer masked to
+    the last ``window`` positions (no re-ordering needed: softmax is
+    permutation-invariant over keys)."""
+    b, _, h, d = q.shape
+    k, v = cache["k"], cache["v"]
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    qg = q.reshape(b, 1, kv, g, d)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    logits *= (1.0 / d ** 0.5)
+    slots = jnp.arange(sk)
+    if window:
+        valid = slots < jnp.minimum(pos + 1, window)   # rolling occupancy
+    else:
+        valid = slots <= pos
+    logits = jnp.where(valid[None, None, None, None, :], logits, NEG)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", w, v)
+    return out.reshape(b, 1, h, d)

@@ -1,0 +1,167 @@
+"""Encoder-decoder transformer (seamless-m4t backbone).
+
+Encoder input is the modality stub: precomputed speech-frame embeddings
+(B, S_enc, D) from ``input_specs`` (per assignment, the conformer frontend is
+not modeled).  The decoder is a standard causal stack with cross-attention.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import attention as attn
+from repro.nn import layers as nnl
+
+
+def init_params(cfg: ArchConfig, rng: jax.Array):
+    dt = jnp.dtype(cfg.dtype)
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv, f, V = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.vocab
+    Le, Ld = cfg.enc_layers, cfg.n_layers
+    ks = jax.random.split(rng, 24)
+
+    def norm(key, *shape):
+        return jax.random.normal(key, shape, dt) * 0.02
+
+    def stack(base, L, extra_cross: bool):
+        p = {
+            "ln1": jnp.ones((L, d), jnp.float32),
+            "wq": norm(ks[base], L, d, h * hd),
+            "wk": norm(ks[base + 1], L, d, kv * hd),
+            "wv": norm(ks[base + 2], L, d, kv * hd),
+            "wo": norm(ks[base + 3], L, h * hd, d),
+            "ln2": jnp.ones((L, d), jnp.float32),
+            "w1": norm(ks[base + 4], L, d, f),
+            "w2": norm(ks[base + 5], L, f, d),
+        }
+        if extra_cross:
+            p.update({
+                "lnx": jnp.ones((L, d), jnp.float32),
+                "xwq": norm(ks[base + 6], L, d, h * hd),
+                "xwk": norm(ks[base + 7], L, d, kv * hd),
+                "xwv": norm(ks[base + 8], L, d, kv * hd),
+                "xwo": norm(ks[base + 9], L, h * hd, d),
+            })
+        return p
+
+    return {
+        "embed": norm(ks[20], V, d),
+        "enc": stack(0, Le, False),
+        "dec": stack(10, Ld, True),
+        "ln_enc": jnp.ones((d,), jnp.float32),
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _self_block(cfg, x, lp, pos, causal):
+    h = nnl.rms_norm(x, lp["ln1"])
+    q, k, v = attn.qkv(h, lp, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    q = nnl.apply_rope(q, pos, cfg.rope_theta)
+    k = nnl.apply_rope(k, pos, cfg.rope_theta)
+    o = attn.sdpa(q, k, v, causal=causal)
+    return x + attn.attn_out(o, lp)
+
+
+def _cross(cfg, x, lp, enc_kv):
+    h = nnl.rms_norm(x, lp["lnx"])
+    b, s, _ = h.shape
+    q = (h @ lp["xwq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k, v = enc_kv
+    o = attn.sdpa(q, k, v, causal=False)
+    b, s2, hh, dd = o.shape
+    return x + o.reshape(b, s2, hh * dd) @ lp["xwo"]
+
+
+def _mlp(cfg, x, lp):
+    h = nnl.rms_norm(x, lp["ln2"])
+    return x + nnl.mlp(h, lp, cfg.act)
+
+
+def encode(cfg: ArchConfig, params, frames):
+    x = frames.astype(jnp.dtype(cfg.dtype))
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, lp):
+        x = _self_block(cfg, x, lp, pos, causal=False)
+        return _mlp(cfg, x, lp), None
+
+    from repro.nn import flags
+    bfn = jax.remat(body) if cfg.remat else body
+    x, _ = jax.lax.scan(bfn, x, params["enc"],
+                        unroll=flags.unroll_for(cfg.enc_layers))
+    return nnl.rms_norm(x, params["ln_enc"])
+
+
+def decode_train(cfg: ArchConfig, params, enc_out, tokens):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    b, s, _ = x.shape
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+
+    def body(x, lp):
+        x = _self_block(cfg, x, lp, pos, causal=True)
+        be, se, _ = enc_out.shape
+        k = (enc_out @ lp["xwk"]).reshape(be, se, cfg.n_kv_heads, cfg.head_dim)
+        v = (enc_out @ lp["xwv"]).reshape(be, se, cfg.n_kv_heads, cfg.head_dim)
+        x = _cross(cfg, x, lp, (k, v))
+        return _mlp(cfg, x, lp), None
+
+    from repro.nn import flags
+    bfn = jax.remat(body) if cfg.remat else body
+    x, _ = jax.lax.scan(bfn, x, params["dec"],
+                        unroll=flags.unroll_for(cfg.n_layers))
+    x = nnl.rms_norm(x, params["ln_f"])
+    return x @ params["embed"].T.astype(x.dtype)
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    enc_out = encode(cfg, params, batch["frames"])
+    logits = decode_train(cfg, params, enc_out, batch["tokens"])
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                             labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+# --------------------------------------------------------------------- decode
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, enc_len: int):
+    dt = jnp.dtype(cfg.dtype)
+    Ld = cfg.n_layers
+    return {
+        "k": jnp.zeros((Ld, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+        "v": jnp.zeros((Ld, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt),
+        # cross-attention K/V precomputed from the encoder output at prefill
+        "xk": jnp.zeros((Ld, batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dt),
+        "xv": jnp.zeros((Ld, batch, enc_len, cfg.n_kv_heads, cfg.head_dim), dt),
+    }
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens][:, None, :].astype(dt)
+    b = x.shape[0]
+    p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b, 1))
+
+    def body(x, xs):
+        lp, ck, cv, xk, xv = xs
+        h = nnl.rms_norm(x, lp["ln1"])
+        q, k, v = attn.qkv(h, lp, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+        q = nnl.apply_rope(q, p, cfg.rope_theta)
+        k = nnl.apply_rope(k, p, cfg.rope_theta)
+        lc = attn.cache_update({"k": ck, "v": cv}, k, v, pos)
+        o = attn.decode_attend(q, lc, pos)
+        x = x + attn.attn_out(o, lp)
+        x = _cross(cfg, x, lp, (xk, xv))
+        x = _mlp(cfg, x, lp)
+        return x, (lc["k"], lc["v"])
+
+    from repro.nn import flags
+    x, (nk, nv) = jax.lax.scan(
+        body, x, (params["dec"], cache["k"], cache["v"],
+                  cache["xk"], cache["xv"]),
+        unroll=flags.unroll_for(cfg.n_layers))
+    x = nnl.rms_norm(x, params["ln_f"])
+    logits = (x @ params["embed"].T.astype(x.dtype))[:, 0]
+    return logits, {"k": nk, "v": nv, "xk": cache["xk"], "xv": cache["xv"]}

@@ -1,0 +1,199 @@
+"""Universal causal transformer LM: dense / MoE / SWA / VLM backbone.
+
+Layers are stacked (leading L axis) and executed with ``lax.scan`` — the HLO
+stays O(1) in depth, which keeps 512-device dry-run compiles fast and is the
+remat-friendly layout for training.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import attention as attn
+from repro.nn import layers as nnl
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _remat(cfg: ArchConfig, body):
+    """Layer remat policy (§Perf iteration 2): "full" recomputes the whole
+    block in backward; "dots" saves matmul outputs and recomputes only the
+    cheap elementwise chains — fewer recompute FLOPs for more saved bytes."""
+    if not cfg.remat:
+        return body
+    if cfg.remat_policy == "dots":
+        return jax.remat(body, policy=jax.checkpoint_policies.dots_saveable)
+    return jax.remat(body)
+
+
+def init_params(cfg: ArchConfig, rng: jax.Array):
+    dt = _dtype(cfg)
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv, f, L, V = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff, cfg.n_layers, cfg.vocab
+    ks = jax.random.split(rng, 16)
+
+    def norm(k, *shape):
+        return jax.random.normal(k, shape, dt) * 0.02
+
+    layers = {
+        "ln1": jnp.ones((L, d), jnp.float32),
+        "ln2": jnp.ones((L, d), jnp.float32),
+        "wq": norm(ks[0], L, d, h * hd),
+        "wk": norm(ks[1], L, d, kv * hd),
+        "wv": norm(ks[2], L, d, kv * hd),
+        "wo": norm(ks[3], L, h * hd, d),
+    }
+    if cfg.moe:
+        e = cfg.moe.n_experts
+        layers["router"] = norm(ks[4], L, d, e)
+        layers["w1"] = norm(ks[5], L, e, d, f)
+        layers["w2"] = norm(ks[6], L, e, f, d)
+        if cfg.act == "silu_gated":
+            layers["w3"] = norm(ks[7], L, e, d, f)
+    else:
+        layers["w1"] = norm(ks[5], L, d, f)
+        layers["w2"] = norm(ks[6], L, f, d)
+        if cfg.act == "silu_gated":
+            layers["w3"] = norm(ks[7], L, d, f)
+    params = {
+        "embed": norm(ks[8], V, d),
+        "layers": layers,
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = norm(ks[9], V, d)
+    return params
+
+
+# ------------------------------------------------------------------ positions
+def positions_for(cfg: ArchConfig, batch: int, seq: int, offset=0):
+    pos = jnp.arange(seq, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (batch, seq))
+    if not cfg.mrope:
+        return pos
+    # M-RoPE stub grid: the first n_patches positions are image patches on a
+    # (g x g) grid at t=0; text follows temporally.
+    npat = min(cfg.n_patches, seq)
+    g = max(1, int(npat ** 0.5))
+    idx = jnp.arange(seq)
+    is_img = idx < npat
+    t = jnp.where(is_img, 0, idx - npat + 1)
+    hh = jnp.where(is_img, idx // g, idx - npat + 1)
+    ww = jnp.where(is_img, idx % g, idx - npat + 1)
+    p3 = jnp.stack([t, hh, ww]).astype(jnp.int32)[:, None, :] + offset
+    return jnp.broadcast_to(p3, (3, batch, seq))
+
+
+def _rope(cfg: ArchConfig, x, pos):
+    if cfg.mrope:
+        return nnl.apply_mrope(x, pos, cfg.rope_theta)
+    return nnl.apply_rope(x, pos, cfg.rope_theta)
+
+
+# -------------------------------------------------------------------- forward
+def _layer(cfg: ArchConfig, x, lp, pos, impl):
+    h = nnl.rms_norm(x, lp["ln1"])
+    q, k, v = attn.qkv(h, lp, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+    q = nnl.constrain(_rope(cfg, q, pos), "dp", None, "tp", None)
+    k = nnl.constrain(_rope(cfg, k, pos), "dp", None, "tp", None)
+    v = nnl.constrain(v, "dp", None, "tp", None)
+    o = attn.sdpa(q, k, v, causal=True, window=cfg.window, impl=impl)
+    o = nnl.constrain(o, "dp", None, "tp", None)
+    x = x + nnl.constrain(attn.attn_out(o, lp), "dp", None, None)
+    h = nnl.rms_norm(x, lp["ln2"])
+    if cfg.moe:
+        y, aux = nnl.moe_mlp(h, lp, cfg.act, cfg.moe.top_k)
+    else:
+        y, aux = nnl.mlp(h, lp, cfg.act), 0.0
+    return x + y, aux
+
+
+def forward(cfg: ArchConfig, params, tokens, patch_embeds=None):
+    """tokens (B, S_text); patch_embeds (B, n_patches, D) for VLM.
+
+    Returns (logits (B,S,V), aux_loss)."""
+    x = params["embed"][tokens].astype(_dtype(cfg))
+    if patch_embeds is not None:
+        x = jnp.concatenate([patch_embeds.astype(x.dtype), x], axis=1)
+    b, s, _ = x.shape
+    pos = positions_for(cfg, b, s)
+
+    def body(carry, lp):
+        x, aux = carry
+        x, a = _layer(cfg, x, lp, pos, cfg.attn_impl)
+        return (x, aux + a), None
+
+    from repro.nn import flags
+    body_fn = _remat(cfg, body)
+    (x, aux), _ = jax.lax.scan(body_fn, (x, 0.0), params["layers"],
+                               unroll=flags.unroll_for(cfg.n_layers))
+    x = nnl.rms_norm(x, params["ln_f"])
+    w_out = params.get("unembed", params["embed"])
+    logits = nnl.constrain(x @ w_out.T.astype(x.dtype), "dp", None, "tp")
+    return logits, aux
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    logits, aux = forward(cfg, params, batch["tokens"],
+                          batch.get("patch_embeds"))
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:          # VLM: loss on text only
+        logits = logits[:, logits.shape[1] - labels.shape[1]:]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                             labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll) + 0.01 * aux
+
+
+# --------------------------------------------------------------------- decode
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    size = min(max_len, cfg.window) if cfg.window else max_len
+    return {
+        "k": jnp.zeros((cfg.n_layers, batch, size, cfg.n_kv_heads,
+                        cfg.head_dim), _dtype(cfg)),
+        "v": jnp.zeros((cfg.n_layers, batch, size, cfg.n_kv_heads,
+                        cfg.head_dim), _dtype(cfg)),
+    }
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    """One token: tokens (B,), pos scalar int32 (absolute position).
+
+    Returns (logits (B,V), new cache)."""
+    x = params["embed"][tokens][:, None, :].astype(_dtype(cfg))
+    b = x.shape[0]
+    if cfg.mrope:
+        p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (3, b, 1))
+    else:
+        p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b, 1))
+
+    def body(x, xs):
+        lp, ck, cv = xs
+        h = nnl.rms_norm(x, lp["ln1"])
+        q, k, v = attn.qkv(h, lp, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim)
+        q = _rope(cfg, q, p)
+        k = _rope(cfg, k, p)
+        layer_cache = attn.cache_update({"k": ck, "v": cv}, k, v, pos,
+                                        window=cfg.window)
+        o = attn.decode_attend(q, layer_cache, pos, window=cfg.window)
+        x = x + attn.attn_out(o, lp)
+        h = nnl.rms_norm(x, lp["ln2"])
+        if cfg.moe:
+            y, _ = nnl.moe_mlp(h, lp, cfg.act, cfg.moe.top_k)
+        else:
+            y = nnl.mlp(h, lp, cfg.act)
+        return x + y, (layer_cache["k"], layer_cache["v"])
+
+    from repro.nn import flags
+    x, (nk, nv) = jax.lax.scan(body, x,
+                               (params["layers"], cache["k"], cache["v"]),
+                               unroll=flags.unroll_for(cfg.n_layers))
+    x = nnl.rms_norm(x, params["ln_f"])
+    w_out = params.get("unembed", params["embed"])
+    logits = (x @ w_out.T.astype(x.dtype))[:, 0]
+    return logits, {"k": nk, "v": nv}

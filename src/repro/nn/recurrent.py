@@ -1,0 +1,113 @@
+"""Chunked linear recurrences — the shared machinery for mLSTM (xLSTM) and
+Mamba2 (SSD), plus the sequential sLSTM cell.
+
+The recurrence  S_t = a_t * S_{t-1} + k_t v_t^T ,  y_t = S_t^T q_t  (with
+per-(step, head) scalar decay a_t) is evaluated in the chunk-parallel form:
+within a chunk of length L the contribution is a masked (decay-weighted)
+attention-like contraction, across chunks the state S (K x V per head) is
+carried by a scan.  Chunk length is a capacity decision: the (L x L) decay
+mask plus the (K x V) state tile must fit VMEM — the same "fusion condition
+1" the DNNVM tiling solver checks for conv chains (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_linear_scan(q, k, v, log_a, *, chunk: int = 128, state0=None,
+                        unroll: bool = False):
+    """q,k: (B,S,H,K); v: (B,S,H,V); log_a: (B,S,H) <= 0 (log decay).
+
+    Returns y (B,S,H,V), final state (B,H,K,V)."""
+    b, s, h, dk = q.shape
+    dv = v.shape[-1]
+    L = min(chunk, s)
+    assert s % L == 0, f"seq {s} not divisible by chunk {L}"
+    n = s // L
+
+    qc = q.reshape(b, n, L, h, dk).transpose(1, 0, 3, 2, 4)   # (n,B,H,L,K)
+    kc = k.reshape(b, n, L, h, dk).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(b, n, L, h, dv).transpose(1, 0, 3, 2, 4)
+    lac = log_a.reshape(b, n, L, h).transpose(1, 0, 3, 2)     # (n,B,H,L)
+
+    def body(S, xs):
+        qb, kb, vb, lab = xs                                   # per chunk
+        cum = jnp.cumsum(lab, axis=-1)                         # (B,H,L)
+        # within-chunk decay-masked "attention":  A[i,j] = exp(cum_i - cum_j)
+        # for j <= i (contribution of step j's kv to step i's output)
+        diff = cum[..., :, None] - cum[..., None, :]           # (B,H,L,L)
+        tri = jnp.tril(jnp.ones((L, L), bool))
+        A = jnp.where(tri, jnp.exp(diff), 0.0).astype(qb.dtype)
+        scores = jnp.einsum("bhik,bhjk->bhij", qb, kb) * A
+        intra = jnp.einsum("bhij,bhjv->bhiv", scores, vb)
+        # inter-chunk: state carried in, decayed per step
+        decay_in = jnp.exp(cum)[..., None].astype(qb.dtype)    # (B,H,L,1)
+        inter = jnp.einsum("bhik,bhkv->bhiv", qb * decay_in, S.astype(qb.dtype))
+        # state update: S' = a_total * S + sum_j exp(cum_L - cum_j) k_j v_j^T
+        total = cum[..., -1:]                                  # (B,H,1)
+        w = jnp.exp(total - cum)[..., None]                    # (B,H,L,1)
+        S = (jnp.exp(total)[..., None] * S.astype(jnp.float32)
+             + jnp.einsum("bhjk,bhjv->bhkv",
+                          kb.astype(jnp.float32) * w,
+                          vb.astype(jnp.float32)))
+        return S, (intra + inter).astype(vb.dtype)
+
+    if state0 is None:
+        state0 = jnp.zeros((b, h, dk, dv), jnp.float32)
+    S, yc = jax.lax.scan(body, state0, (qc, kc, vc, lac),
+                         unroll=n if unroll else 1)
+    y = yc.transpose(1, 0, 3, 2, 4).reshape(b, s, h, dv)
+    return y, S
+
+
+def linear_step(q, k, v, log_a, state):
+    """One decode step.  q,k (B,H,K); v (B,H,V); log_a (B,H); state (B,H,K,V).
+
+    Returns y (B,H,V), new state."""
+    a = jnp.exp(log_a.astype(jnp.float32))[..., None, None]
+    S = a * state + jnp.einsum("bhk,bhv->bhkv",
+                               k.astype(jnp.float32), v.astype(jnp.float32))
+    y = jnp.einsum("bhk,bhkv->bhv", q.astype(jnp.float32), S)
+    return y.astype(q.dtype), S
+
+
+# ------------------------------------------------------------------- sLSTM
+def slstm_scan(x, p, state0=None):
+    """Sequential sLSTM block core: x (B,S,D) -> (B,S,D), state.
+
+    True recurrence (non-linear state dependence) => lax.scan over time;
+    this is the one layer family that cannot use the chunked form, noted in
+    DESIGN.md §5."""
+    b, s, d = x.shape
+    gates = x @ p["w_gates"] + p["b_gates"]                   # (B,S,4D)
+    if state0 is None:
+        state0 = (jnp.zeros((b, d), jnp.float32), jnp.zeros((b, d), jnp.float32))
+
+    def step(carry, g):
+        h, c = carry
+        gi, gf, gz, go = jnp.split(g.astype(jnp.float32)
+                                   + (h @ p["r_gates"].astype(jnp.float32)), 4, -1)
+        i, f = jax.nn.sigmoid(gi), jax.nn.sigmoid(gf)
+        z, o = jnp.tanh(gz), jax.nn.sigmoid(go)
+        c = f * c + i * z
+        h = o * jnp.tanh(c)
+        return (h, c), h
+
+    (_, _), hs = jax.lax.scan(step, state0, gates.transpose(1, 0, 2))
+    return hs.transpose(1, 0, 2).astype(x.dtype), state0
+
+
+def slstm_step(x, p, state):
+    """One decode step: x (B,D), state (h, c)."""
+    h, c = state
+    g = x @ p["w_gates"] + p["b_gates"]
+    gi, gf, gz, go = jnp.split(g.astype(jnp.float32)
+                               + (h @ p["r_gates"].astype(jnp.float32)), 4, -1)
+    i, f = jax.nn.sigmoid(gi), jax.nn.sigmoid(gf)
+    z, o = jnp.tanh(gz), jax.nn.sigmoid(go)
+    c = f * c + i * z
+    h = o * jnp.tanh(c)
+    return h.astype(x.dtype), (h, c)

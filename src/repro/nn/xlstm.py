@@ -1,0 +1,203 @@
+"""xLSTM stack: chunked-parallel mLSTM blocks with an sLSTM block every
+``cfg.slstm_every`` layers (the [7:1] flavor).
+
+mLSTM block: x -> norm -> up-projection to 2*d (value path + gate path);
+q/k from the value path, per-head matrix memory via the shared chunked
+linear recurrence; sigmoid input/forget gating (stabilized exponential
+gating omitted — DESIGN.md §5); gated down-projection back to d.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import layers as nnl
+from repro.nn import recurrent as rec
+
+
+def _dims(cfg: ArchConfig):
+    inner = 2 * cfg.d_model
+    h = cfg.n_heads
+    return inner, h, inner // h       # inner, heads, head_dim
+
+
+def init_params(cfg: ArchConfig, rng: jax.Array):
+    dt = jnp.dtype(cfg.dtype)
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    inner, h, hd = _dims(cfg)
+    k = cfg.slstm_every
+    n_s = L // k if k else 0          # sLSTM count
+    n_m = L - n_s
+    ks = jax.random.split(rng, 12)
+
+    def norm(key, *shape):
+        return jax.random.normal(key, shape, dt) * 0.02
+
+    mlstm = {
+        "ln": jnp.ones((n_m, d), jnp.float32),
+        "w_up": norm(ks[0], n_m, d, 2 * inner),     # value + gate paths
+        # q, k and the i/f gates come from per-head block-diagonal
+        # projections (the real mLSTM's blocked q/k — keeps the layer at
+        # ~27M params for the 1.3b config instead of a dense inner x inner)
+        "w_qkg": norm(ks[1], n_m, h, hd, 2 * hd + 2),
+        "w_down": norm(ks[2], n_m, inner, d),
+    }
+    slstm = {
+        "ln": jnp.ones((max(n_s, 1), d), jnp.float32),
+        "w_gates": norm(ks[3], max(n_s, 1), d, 4 * d),
+        "r_gates": norm(ks[4], max(n_s, 1), d, 4 * d),
+        "b_gates": jnp.zeros((max(n_s, 1), 4 * d), dt),
+        "w_out": norm(ks[5], max(n_s, 1), d, d),
+    }
+    return {
+        "embed": norm(ks[6], V, d),
+        "mlstm": mlstm,
+        "slstm": slstm,
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _mlstm_qkvg(cfg, x, lp):
+    inner, h, hd = _dims(cfg)
+    b, s, _ = x.shape
+    up = x @ lp["w_up"]
+    val, gate = jnp.split(up, 2, axis=-1)                    # (B,S,inner) each
+    valh = val.reshape(b, s, h, hd)
+    qkg = jnp.einsum("bshd,hde->bshe", valh, lp["w_qkg"])    # block-diagonal
+    q = qkg[..., :hd] / hd ** 0.5
+    k = qkg[..., hd:2 * hd] / hd ** 0.5
+    gi = qkg[..., 2 * hd]                                    # (B,S,H)
+    gf = qkg[..., 2 * hd + 1]
+    v = valh
+    log_a = jax.nn.log_sigmoid(gf.astype(jnp.float32))       # decay in (0,1)
+    i_gate = jax.nn.sigmoid(gi.astype(jnp.float32))
+    return q, k, v, log_a, i_gate, gate
+
+
+def _mlstm_block(cfg, x, lp, chunk, unroll=False):
+    inner, h, hd = _dims(cfg)
+    hin = nnl.rms_norm(x, lp["ln"])
+    q, k, v, log_a, i_gate, gate = _mlstm_qkvg(cfg, hin, lp)
+    k = k * i_gate[..., None].astype(k.dtype)                # input gating
+    y, _ = rec.chunked_linear_scan(q, k, v, log_a, chunk=chunk, unroll=unroll)
+    b, s, _, _ = y.shape
+    y = y.reshape(b, s, inner) * jax.nn.silu(gate)
+    return x + y @ lp["w_down"]
+
+
+def _slstm_block(cfg, x, lp):
+    h = nnl.rms_norm(x, lp["ln"])
+    y, _ = rec.slstm_scan(h, lp)
+    return x + y @ lp["w_out"]
+
+
+def forward(cfg: ArchConfig, params, tokens, patch_embeds=None):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    b, s, d = x.shape
+    from repro.nn import flags
+    chunk, unroll = flags.chunk_for(s)
+    k = cfg.slstm_every
+    n_groups = cfg.n_layers // k if k else 0
+    per_group = k - 1 if k else 0
+    mp = params["mlstm"]
+
+    def mbody(x, lp):
+        return _mlstm_block(cfg, x, lp, chunk, unroll), None
+
+    body = jax.remat(mbody) if cfg.remat else mbody
+    off = 0
+    for gi in range(n_groups):
+        sl = jax.tree.map(lambda a: a[off:off + per_group], mp)
+        x, _ = jax.lax.scan(body, x, sl, unroll=flags.unroll_for(per_group))
+        off += per_group
+        sp = jax.tree.map(lambda a: a[gi], params["slstm"])
+        x = _slstm_block(cfg, x, sp)
+    rem = jax.tree.map(lambda a: a[off:], mp)
+    n_rem = cfg.n_layers - n_groups * k if k else cfg.n_layers
+    if n_rem > 0 or n_groups == 0:
+        x, _ = jax.lax.scan(body, x, rem, unroll=flags.unroll_for(max(n_rem, 1)))
+    x = nnl.rms_norm(x, params["ln_f"])
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits, 0.0
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    logits, _ = forward(cfg, params, batch["tokens"])
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                             labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+# --------------------------------------------------------------------- decode
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    """Constant-size recurrent state — the sub-quadratic long_500k story."""
+    inner, h, hd = _dims(cfg)
+    d = cfg.d_model
+    k = cfg.slstm_every
+    n_s = cfg.n_layers // k if k else 0
+    n_m = cfg.n_layers - n_s
+    return {
+        "m_state": jnp.zeros((n_m, batch, h, hd, hd), jnp.float32),
+        "s_h": jnp.zeros((max(n_s, 1), batch, d), jnp.float32),
+        "s_c": jnp.zeros((max(n_s, 1), batch, d), jnp.float32),
+    }
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens][:, None, :].astype(dt)       # (B,1,D)
+    inner, h, hd = _dims(cfg)
+    k = cfg.slstm_every
+    n_groups = cfg.n_layers // k if k else 0
+    per_group = k - 1 if k else 0
+    mp = params["mlstm"]
+
+    def mstep(x, lp, S):
+        hin = nnl.rms_norm(x, lp["ln"])
+        q, kk, v, log_a, i_gate, gate = _mlstm_qkvg(cfg, hin, lp)
+        kk = kk * i_gate[..., None].astype(kk.dtype)
+        y, S = rec.linear_step(q[:, 0], kk[:, 0], v[:, 0], log_a[:, 0], S)
+        b = x.shape[0]
+        y = y.reshape(b, 1, inner) * jax.nn.silu(gate)
+        return x + y @ lp["w_down"], S
+
+    def scan_m(x, sl, states):
+        from repro.nn import flags
+
+        def body(x, xs):
+            lp, S = xs
+            x, S = mstep(x, lp, S)
+            return x, S
+        n = jax.tree.leaves(sl)[0].shape[0]
+        return jax.lax.scan(body, x, (sl, states),
+                            unroll=flags.unroll_for(max(n, 1)))
+
+    new_m, new_h, new_c = [], [], []
+    off = 0
+    for gi in range(n_groups):
+        sl = jax.tree.map(lambda a: a[off:off + per_group], mp)
+        x, S = scan_m(x, sl, cache["m_state"][off:off + per_group])
+        new_m.append(S)
+        off += per_group
+        sp = jax.tree.map(lambda a: a[gi], params["slstm"])
+        hin = nnl.rms_norm(x, sp["ln"])
+        y, (sh, sc) = rec.slstm_step(hin[:, 0], sp,
+                                     (cache["s_h"][gi], cache["s_c"][gi]))
+        x = x + (y @ sp["w_out"])[:, None]
+        new_h.append(sh)
+        new_c.append(sc)
+    if cfg.n_layers - n_groups * k > 0 or n_groups == 0:
+        sl = jax.tree.map(lambda a: a[off:], mp)
+        x, S = scan_m(x, sl, cache["m_state"][off:])
+        new_m.append(S)
+    x = nnl.rms_norm(x, params["ln_f"])
+    logits = (x @ params["embed"].T.astype(x.dtype))[:, 0]
+    new_cache = {
+        "m_state": jnp.concatenate(new_m) if new_m else cache["m_state"],
+        "s_h": jnp.stack(new_h) if new_h else cache["s_h"],
+        "s_c": jnp.stack(new_c) if new_c else cache["s_c"],
+    }
+    return logits, new_cache

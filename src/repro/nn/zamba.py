@@ -1,0 +1,237 @@
+"""Zamba2-style hybrid: a Mamba2 backbone with ONE shared-weight
+attention+MLP block applied every ``cfg.shared_attn_every`` layers.
+
+Mamba2 (SSD form) reuses the chunked linear recurrence: k ~ B-projection
+(ssm_state dim), v ~ x heads (head_dim), q ~ C-projection, per-head scalar
+decay from the dt/A gate.  The shared block has distinct per-application
+LayerNorms and rank-r LoRA adapters on its projections (Zamba2's design);
+its input is [hidden, original embedding] concatenated, as in the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.nn import attention as attn
+from repro.nn import layers as nnl
+from repro.nn import recurrent as rec
+
+
+def _dims(cfg: ArchConfig):
+    inner = 2 * cfg.d_model
+    h = cfg.n_heads
+    return inner, h, inner // h, cfg.ssm_state
+
+
+def _napp(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_every if cfg.shared_attn_every else 0
+
+
+def init_params(cfg: ArchConfig, rng: jax.Array):
+    dt = jnp.dtype(cfg.dtype)
+    d, L, V = cfg.d_model, cfg.n_layers, cfg.vocab
+    inner, h, hd, N = _dims(cfg)
+    napp = _napp(cfg)
+    r = cfg.shared_attn_lora_rank
+    ks = jax.random.split(rng, 20)
+
+    def norm(key, *shape):
+        return jax.random.normal(key, shape, dt) * 0.02
+
+    mamba = {
+        "ln": jnp.ones((L, d), jnp.float32),
+        "w_in": norm(ks[0], L, d, 2 * inner),           # x path + gate path
+        "w_bcdt": norm(ks[1], L, inner, 2 * N + h),     # B, C, dt per head
+        "a_log": jnp.zeros((L, h), jnp.float32),        # per-head decay bias
+        "w_out": norm(ks[2], L, inner, d),
+    }
+    hq, hkv = cfg.n_heads * cfg.head_dim, cfg.n_kv_heads * cfg.head_dim
+    shared = {
+        "ln1": jnp.ones((2 * d,), jnp.float32),
+        "wq": norm(ks[3], 2 * d, hq), "wk": norm(ks[4], 2 * d, hkv),
+        "wv": norm(ks[5], 2 * d, hkv), "wo": norm(ks[6], hq, d),
+        "ln2": jnp.ones((d,), jnp.float32),
+        "w1": norm(ks[7], d, cfg.d_ff), "w3": norm(ks[8], d, cfg.d_ff),
+        "w2": norm(ks[9], cfg.d_ff, d),
+    }
+    lora = {  # per-application rank-r adapters on q and w1
+        "qa": norm(ks[10], napp, 2 * d, r), "qb": norm(ks[11], napp, r, hq),
+        "m1a": norm(ks[12], napp, d, r), "m1b": norm(ks[13], napp, r, cfg.d_ff),
+        "ln1": jnp.ones((napp, 2 * d), jnp.float32),
+        "ln2": jnp.ones((napp, d), jnp.float32),
+    }
+    return {
+        "embed": norm(ks[14], V, d),
+        "mamba": mamba,
+        "shared": shared,
+        "lora": lora,
+        "ln_f": jnp.ones((d,), jnp.float32),
+    }
+
+
+def _mamba_qkvg(cfg, hin, lp):
+    inner, h, hd, N = _dims(cfg)
+    b, s, _ = hin.shape
+    up = hin @ lp["w_in"]
+    xpath, gate = jnp.split(up, 2, axis=-1)
+    bcdt = xpath @ lp["w_bcdt"]
+    Bm, Cm, dt_ = jnp.split(bcdt, [N, 2 * N], axis=-1)
+    # per-head decay: a = -softplus(dt + a_log); k=B (shared across heads),
+    # v=x heads, q=C
+    log_a = -jax.nn.softplus(dt_.astype(jnp.float32)
+                             + lp["a_log"][None, None, :])          # (B,S,H)
+    dt_g = jax.nn.softplus(dt_.astype(jnp.float32))                 # input gate
+    k = jnp.broadcast_to(Bm[:, :, None, :], (b, s, h, N))
+    q = jnp.broadcast_to(Cm[:, :, None, :], (b, s, h, N))
+    v = xpath.reshape(b, s, h, hd) * dt_g[..., None].astype(xpath.dtype)
+    return q, k, v, log_a, gate
+
+
+def _mamba_block(cfg, x, lp, chunk, unroll=False):
+    inner, h, hd, N = _dims(cfg)
+    hin = nnl.rms_norm(x, lp["ln"])
+    q, k, v, log_a, gate = _mamba_qkvg(cfg, hin, lp)
+    y, _ = rec.chunked_linear_scan(q, k, v, log_a, chunk=chunk, unroll=unroll)
+    b, s = x.shape[:2]
+    y = y.reshape(b, s, inner) * jax.nn.silu(gate)
+    return x + y @ lp["w_out"]
+
+
+def _shared_block(cfg, x, x0, sp, la):
+    """Shared attention+MLP; input = concat(hidden, embedding residual)."""
+    b, s, d = x.shape
+    cat = jnp.concatenate([x, x0], axis=-1)
+    h = nnl.rms_norm(cat, la["ln1"] * sp["ln1"])
+    wq = sp["wq"] + la["qa"] @ la["qb"]
+    q = h @ wq
+    k, v = h @ sp["wk"], h @ sp["wv"]
+    hd = cfg.head_dim
+    q = q.reshape(b, s, cfg.n_heads, hd)
+    k = k.reshape(b, s, cfg.n_kv_heads, hd)
+    v = v.reshape(b, s, cfg.n_kv_heads, hd)
+    pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    q, k = nnl.apply_rope(q, pos, cfg.rope_theta), nnl.apply_rope(k, pos, cfg.rope_theta)
+    o = attn.sdpa(q, k, v, causal=True)
+    x = x + o.reshape(b, s, -1) @ sp["wo"]
+    h2 = nnl.rms_norm(x, la["ln2"] * sp["ln2"])
+    w1 = sp["w1"] + la["m1a"] @ la["m1b"]
+    y = jax.nn.silu(h2 @ w1) * (h2 @ sp["w3"])
+    return x + y @ sp["w2"]
+
+
+def forward(cfg: ArchConfig, params, tokens, patch_embeds=None):
+    x = params["embed"][tokens].astype(jnp.dtype(cfg.dtype))
+    x0 = x
+    b, s, d = x.shape
+    from repro.nn import flags
+    chunk, unroll = flags.chunk_for(s)
+    k = cfg.shared_attn_every
+    napp = _napp(cfg)
+    mp = params["mamba"]
+
+    def mbody(x, lp):
+        return _mamba_block(cfg, x, lp, chunk, unroll), None
+
+    body = jax.remat(mbody) if cfg.remat else mbody
+    off = 0
+    for gi in range(napp):
+        sl = jax.tree.map(lambda a: a[off:off + k], mp)
+        x, _ = jax.lax.scan(body, x, sl, unroll=flags.unroll_for(k))
+        off += k
+        la = jax.tree.map(lambda a: a[gi], params["lora"])
+        x = _shared_block(cfg, x, x0, params["shared"], la)
+    if cfg.n_layers - off > 0:
+        sl = jax.tree.map(lambda a: a[off:], mp)
+        x, _ = jax.lax.scan(body, x, sl,
+                            unroll=flags.unroll_for(cfg.n_layers - off))
+    x = nnl.rms_norm(x, params["ln_f"])
+    logits = x @ params["embed"].T.astype(x.dtype)
+    return logits, 0.0
+
+
+def loss_fn(cfg: ArchConfig, params, batch):
+    logits, _ = forward(cfg, params, batch["tokens"])
+    labels = batch["labels"]
+    lse = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logits.astype(jnp.float32),
+                             labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+# --------------------------------------------------------------------- decode
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    inner, h, hd, N = _dims(cfg)
+    napp = _napp(cfg)
+    return {
+        "ssm": jnp.zeros((cfg.n_layers, batch, h, N, hd), jnp.float32),
+        "k": jnp.zeros((max(napp, 1), batch, max_len, cfg.n_kv_heads,
+                        cfg.head_dim), jnp.dtype(cfg.dtype)),
+        "v": jnp.zeros((max(napp, 1), batch, max_len, cfg.n_kv_heads,
+                        cfg.head_dim), jnp.dtype(cfg.dtype)),
+    }
+
+
+def decode_step(cfg: ArchConfig, params, cache, tokens, pos):
+    dt = jnp.dtype(cfg.dtype)
+    x = params["embed"][tokens][:, None, :].astype(dt)
+    x0 = x
+    inner, h, hd, N = _dims(cfg)
+    k_every = cfg.shared_attn_every
+    napp = _napp(cfg)
+    mp = params["mamba"]
+    b = x.shape[0]
+
+    def mstep_scan(x, sl, states):
+        from repro.nn import flags
+
+        def body(x, xs):
+            lp, S = xs
+            hin = nnl.rms_norm(x, lp["ln"])
+            q, kk, v, log_a, gate = _mamba_qkvg(cfg, hin, lp)
+            y, S = rec.linear_step(q[:, 0], kk[:, 0], v[:, 0], log_a[:, 0], S)
+            y = y.reshape(b, 1, inner) * jax.nn.silu(gate)
+            return x + y @ lp["w_out"], S
+        n = jax.tree.leaves(sl)[0].shape[0]
+        return jax.lax.scan(body, x, (sl, states),
+                            unroll=flags.unroll_for(max(n, 1)))
+
+    new_ssm, new_k, new_v = [], [], []
+    off = 0
+    for gi in range(napp):
+        sl = jax.tree.map(lambda a: a[off:off + k_every], mp)
+        x, S = mstep_scan(x, sl, cache["ssm"][off:off + k_every])
+        new_ssm.append(S)
+        off += k_every
+        la = jax.tree.map(lambda a: a[gi], params["lora"])
+        sp = params["shared"]
+        cat = jnp.concatenate([x, x0], axis=-1)
+        hin = nnl.rms_norm(cat, la["ln1"] * sp["ln1"])
+        wq = sp["wq"] + la["qa"] @ la["qb"]
+        q = (hin @ wq).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+        kk = (hin @ sp["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        vv = (hin @ sp["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+        p = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b, 1))
+        q = nnl.apply_rope(q, p, cfg.rope_theta)
+        kk = nnl.apply_rope(kk, p, cfg.rope_theta)
+        lc = attn.cache_update({"k": cache["k"][gi], "v": cache["v"][gi]},
+                               kk, vv, pos)
+        o = attn.decode_attend(q, lc, pos)
+        x = x + o.reshape(b, 1, -1) @ sp["wo"]
+        h2 = nnl.rms_norm(x, la["ln2"] * sp["ln2"])
+        w1 = sp["w1"] + la["m1a"] @ la["m1b"]
+        y = jax.nn.silu(h2 @ w1) * (h2 @ sp["w3"])
+        x = x + y @ sp["w2"]
+        new_k.append(lc["k"])
+        new_v.append(lc["v"])
+    if cfg.n_layers - off > 0:
+        sl = jax.tree.map(lambda a: a[off:], mp)
+        x, S = mstep_scan(x, sl, cache["ssm"][off:])
+        new_ssm.append(S)
+    x = nnl.rms_norm(x, params["ln_f"])
+    logits = (x @ params["embed"].T.astype(x.dtype))[:, 0]
+    return logits, {
+        "ssm": jnp.concatenate(new_ssm) if new_ssm else cache["ssm"],
+        "k": jnp.stack(new_k) if new_k else cache["k"],
+        "v": jnp.stack(new_v) if new_v else cache["v"],
+    }

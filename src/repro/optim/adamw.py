@@ -1,0 +1,68 @@
+"""AdamW with ZeRO-1-shardable moments and configurable storage dtypes.
+
+Moments are stored in ``moment_dtype`` (bf16 by default at 100B+ scale —
+the memory receipt that lets llama3-405b train on one v5e pod, see
+EXPERIMENTS.md §Dry-run) and promoted to fp32 for the update math.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    moment_dtype: str = "bfloat16"
+    warmup_steps: int = 100
+
+
+def adamw_init(params, cfg: AdamWConfig = AdamWConfig()):
+    return init_moments(params, cfg)
+
+
+def init_moments(params, cfg: AdamWConfig):
+    dt = jnp.dtype(cfg.moment_dtype)
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, dt), params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _schedule(cfg: AdamWConfig, step):
+    warm = jnp.minimum(1.0, (step + 1) / cfg.warmup_steps)
+    return cfg.lr * warm
+
+
+def adamw_update(params, grads, opt_state, cfg: AdamWConfig):
+    step = opt_state["step"] + 1
+    lr = _schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+    dt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(p, g, m, v):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(g32)
+        mh, vh = m32 / bc1, v32 / bc2
+        step_ = mh * jax.lax.rsqrt(vh + cfg.eps * cfg.eps)  # ~m/(sqrt(v)+eps)
+        p32 = p.astype(jnp.float32)
+        p_new = p32 - lr * (step_ + cfg.weight_decay * p32)
+        return p_new.astype(p.dtype), m32.astype(dt), v32.astype(dt)
+
+    out = jax.tree.map(upd, params, grads, opt_state["m"], opt_state["v"])
+    leaves, treedef = jax.tree_util.tree_flatten(
+        out, is_leaf=lambda x: isinstance(x, tuple))
+    new_p = jax.tree_util.tree_unflatten(treedef, [t[0] for t in leaves])
+    new_m = jax.tree_util.tree_unflatten(treedef, [t[1] for t in leaves])
+    new_v = jax.tree_util.tree_unflatten(treedef, [t[2] for t in leaves])
+    return new_p, {"m": new_m, "v": new_v, "step": step}

@@ -1,0 +1,83 @@
+"""End-to-end: quantize -> plan -> execute; bit-exact validation (paper C7)
+and mixed compilation (C8)."""
+import numpy as np
+import pytest
+
+from repro.cnn import build, init_params
+from repro.core import executor, partition, pathsearch, quantize, validate
+from repro.hw import ZU2
+from tests.conftest import make_toy_resnet_graph, toy_params
+
+
+def _calibrated(g, params, rng, size, c):
+    x = rng.standard_normal((1, size, size, c)).astype(np.float32)
+    qm = quantize.calibrate(g, params, x, executor.run_float)
+    xq = quantize.quantize_to(x, qm.f_a["data"])
+    return qm, x, xq
+
+
+def test_toy_bit_exact_all_strategies(rng):
+    g = make_toy_resnet_graph()
+    params = toy_params(g)
+    qm, x, xq = _calibrated(g, params, rng, 16, 8)
+    for strat_fn in (pathsearch.naive, pathsearch.greedy, pathsearch.search):
+        s = strat_fn(g, ZU2)
+        rep = validate.bit_exact(g, qm, xq, strategy=s, backend="pallas",
+                                 float_params=params)
+        assert rep.bit_exact, (strat_fn.__name__, rep.max_abs_diff)
+
+
+def test_fusion_never_changes_numerics(rng):
+    """Any strategy == naive bit-for-bit (fusion is execution-only)."""
+    g = make_toy_resnet_graph()
+    params = toy_params(g)
+    qm, _, xq = _calibrated(g, params, rng, 16, 8)
+    s = pathsearch.search(g, ZU2)
+    from repro.core.executor import Int8Executor
+
+    ref = Int8Executor(g, qm, strategy=None, backend="ref")(xq)
+    fused = Int8Executor(g, qm, strategy=s, backend="ref")(xq)
+    for k in ref:
+        np.testing.assert_array_equal(ref[k], fused[k])
+
+
+@pytest.mark.parametrize("model,img", [("vgg16", 32), ("resnet50", 32),
+                                       ("googlenet", 64), ("yolo_lite", 64)])
+def test_small_cnn_bit_exact(model, img, rng):
+    g = build(model, img=img, num_classes=10) if model != "yolo_lite" \
+        else build(model, img=img)
+    params = init_params(g)
+    x = rng.standard_normal(g.shape("data")).astype(np.float32)
+    qm = quantize.calibrate(g, params, x, executor.run_float)
+    xq = quantize.quantize_to(x, qm.f_a["data"])
+    s = pathsearch.search(g, ZU2)
+    rep = validate.bit_exact(g, qm, xq, strategy=s, backend="pallas")
+    assert rep.bit_exact, rep.max_abs_diff
+
+
+def test_quantization_sqnr_reasonable(rng):
+    """Int8 path should track the float model (random weights, so the bar is
+    qualitative: positive SQNR on the pre-softmax output)."""
+    g = make_toy_resnet_graph()
+    params = toy_params(g)
+    qm, x, xq = _calibrated(g, params, rng, 16, 8)
+    rep = validate.bit_exact(g, qm, xq, strategy=None, backend="ref",
+                             float_params=params)
+    assert all(v > 0 for v in rep.sqnr_db.values()), rep.sqnr_db
+
+
+def test_partition_paper_policy():
+    g = make_toy_resnet_graph()
+    table = partition.assign(g, "paper")
+    assert table["fc1"] == "cpu"
+    assert table["c1"] == "acc"
+    table2 = partition.assign(g, "all_acc")
+    assert table2["fc1"] == "acc"
+
+
+def test_planner_respects_partition():
+    g = make_toy_resnet_graph()
+    dv = partition.device_of(g, "paper")
+    s = pathsearch.search(g, ZU2, device_of=dv)
+    assert ["fc1"] not in s.groups
+    assert "fc1" in s.meta["host_nodes"]

@@ -1,0 +1,101 @@
+"""conv_fused Pallas kernel: bit-exact vs the int8 oracle across a
+shape/stride/pool/eltwise sweep (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.kernels.conv_fused.ops import fused_conv_block, supports
+from repro.kernels.conv_fused.ref import fused_conv_ref
+
+
+def _data(rng, h, w, ic, oc, k):
+    x = rng.integers(-128, 128, (1, h, w, ic)).astype(np.int8)
+    wt = rng.integers(-128, 128, (k, k, ic, oc)).astype(np.int8)
+    b = rng.integers(-2000, 2000, oc).astype(np.int32)
+    return jnp.asarray(x), jnp.asarray(wt), jnp.asarray(b)
+
+
+CASES = [
+    # (h, w, ic, oc, k, stride, pad, relu, shift)
+    (8, 8, 4, 8, 3, 1, 1, True, 6),
+    (8, 8, 4, 8, 3, 1, 1, False, 6),
+    (9, 9, 3, 5, 3, 1, 0, True, 7),       # ragged dims
+    (12, 12, 8, 16, 5, 1, 2, True, 8),
+    (12, 12, 8, 16, 3, 2, 1, True, 7),    # stride 2
+    (16, 16, 16, 4, 1, 1, 0, True, 5),    # 1x1
+    (7, 7, 2, 3, 3, 2, 1, False, 4),      # everything ragged
+]
+
+
+@pytest.mark.parametrize("h,w,ic,oc,k,s,p,relu,shift", CASES)
+def test_plain_conv_bit_exact(h, w, ic, oc, k, s, p, relu, shift):
+    rng = np.random.default_rng(h * w + oc)
+    x, wt, b = _data(rng, h, w, ic, oc, k)
+    got = fused_conv_block(x, wt, b, stride=(s, s), pad=(p, p), shift=shift,
+                           relu=relu)
+    want = fused_conv_ref(x, wt, b, stride=(s, s), pad=(p, p), shift=shift,
+                          relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+POOL_CASES = [
+    # (h, w, ic, oc, k, pad, kp, sp)
+    (8, 8, 4, 8, 3, 1, 2, 2),
+    (10, 10, 4, 8, 3, 1, 2, 2),
+    (8, 8, 4, 8, 3, 1, 3, 1),
+    (12, 12, 3, 6, 5, 2, 2, 2),
+    (14, 14, 8, 16, 3, 1, 3, 1),
+]
+
+
+@pytest.mark.parametrize("h,w,ic,oc,k,p,kp,sp", POOL_CASES)
+def test_conv_pool_bit_exact(h, w, ic, oc, k, p, kp, sp):
+    rng = np.random.default_rng(h + kp * 10)
+    x, wt, b = _data(rng, h, w, ic, oc, k)
+    oh = h + 2 * p - k + 1
+    assert supports(kernel=(k, k), stride=(1, 1), pool=(kp, sp),
+                    conv_oh=oh, conv_ow=oh)
+    got = fused_conv_block(x, wt, b, stride=(1, 1), pad=(p, p), shift=7,
+                           relu=True, pool=(kp, sp))
+    want = fused_conv_ref(x, wt, b, stride=(1, 1), pad=(p, p), shift=7,
+                          relu=True, pool=(kp, sp))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("relu_out", [False, True])
+def test_conv_eltwise_bit_exact(relu_out):
+    rng = np.random.default_rng(3)
+    x, wt, b = _data(rng, 8, 8, 4, 8, 3)
+    side = jnp.asarray(rng.integers(-128, 128, (1, 8, 8, 8)).astype(np.int8))
+    elt = (side, 1, 2, relu_out)
+    got = fused_conv_block(x, wt, b, stride=(1, 1), pad=(1, 1), shift=6,
+                           relu=False, eltwise=elt)
+    want = fused_conv_ref(x, wt, b, stride=(1, 1), pad=(1, 1), shift=6,
+                          relu=False, eltwise=elt)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(4, 12), st.integers(4, 12), st.sampled_from([1, 2, 3, 4]),
+       st.sampled_from([1, 2, 4, 8]), st.sampled_from([1, 3]),
+       st.integers(0, 10), st.booleans())
+def test_property_sweep(h, w, ic, oc, k, shift, relu):
+    rng = np.random.default_rng(h * 31 + w)
+    x, wt, b = _data(rng, h, w, ic, oc, k)
+    p = (k - 1) // 2
+    got = fused_conv_block(x, wt, b, stride=(1, 1), pad=(p, p), shift=shift,
+                           relu=relu)
+    want = fused_conv_ref(x, wt, b, stride=(1, 1), pad=(p, p), shift=shift,
+                          relu=relu)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_unsupported_patterns_fall_back():
+    assert not supports(kernel=(3, 3), stride=(1, 1), dilation=(2, 2))
+    assert not supports(kernel=(3, 3), stride=(1, 2))
+    assert not supports(kernel=(3, 3), stride=(1, 1), depthwise=True)
+    # pool windows not tiling the conv output exactly
+    assert not supports(kernel=(3, 3), stride=(1, 1), pool=(3, 2),
+                        conv_oh=8, conv_ow=8)

@@ -1,0 +1,112 @@
+"""Algorithm 2 (execution path search) invariants (paper C3)."""
+import itertools
+import math
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import pathsearch
+from repro.core.cost import AnalyticEvaluator
+from repro.core.xgraph import XGraph
+from repro.core import frontend
+from repro.hw import ZU2, ZU9
+from tests.conftest import make_toy_resnet_graph
+
+
+def test_cover_exactly_once():
+    g = make_toy_resnet_graph()
+    for fn in (pathsearch.naive, pathsearch.greedy, pathsearch.search):
+        s = fn(g, ZU2)
+        plannable = {n.name for n in g if n.op != "input"}
+        assert s.covered() == plannable
+        seen = [nm for grp in s.groups + s.horizontal for nm in grp]
+        assert len(seen) == len(set(seen)), "node fused twice"
+
+
+def test_cost_ordering():
+    """optimized <= greedy <= naive under the same evaluator."""
+    g = make_toy_resnet_graph()
+    ev = AnalyticEvaluator(g, ZU2)
+    n = pathsearch.naive(g, ZU2, evaluator=ev)
+    gr = pathsearch.greedy(g, ZU2, evaluator=ev)
+    opt = pathsearch.search(g, ZU2, evaluator=ev)
+    assert opt.cost <= gr.cost + 1e-12
+    assert gr.cost <= n.cost + 1e-12
+
+
+def _chain_graph(lengths):
+    g = XGraph()
+    g.input("x", (1, 32, 32, 8))
+    last = "x"
+    for i, oc in enumerate(lengths):
+        g.add("conv", f"c{i}", (last,), oc=oc, kernel=(3, 3), pad="same")
+        last = f"c{i}"
+    return g
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.sampled_from([8, 16, 32]), min_size=2, max_size=6))
+def test_chain_partition_optimal_vs_bruteforce(ocs):
+    """Floyd chain partition == brute-force best over all cut subsets."""
+    g = _chain_graph(ocs)
+    frontend.lower(g)
+    ev = AnalyticEvaluator(g, ZU9)
+    from repro.core import isomorphism, templates
+    pairs = templates.pairwise_fusable(
+        isomorphism.find_all(g, templates.KERNEL_TEMPLATES))
+    chain = [f"c{i}" for i in range(len(ocs))]
+    segs, cost = pathsearch.partition_chain(g, chain, pairs, ev)
+    # brute force: every composition of the chain into valid segments
+    best = math.inf
+    m = len(chain)
+    for cuts in itertools.product([0, 1], repeat=m - 1):
+        pieces, cur = [], [chain[0]]
+        for i, c in enumerate(cuts):
+            if c:
+                pieces.append(cur)
+                cur = []
+            cur.append(chain[i + 1])
+        pieces.append(cur)
+        tot = 0.0
+        ok = True
+        for p in pieces:
+            if len(p) > 1 and not all((p[i], p[i + 1]) in pairs
+                                      for i in range(len(p) - 1)):
+                ok = False
+                break
+            c = ev(p)
+            if not math.isfinite(c):
+                ok = False
+                break
+            tot += c
+        if ok:
+            best = min(best, tot)
+    assert abs(cost - best) < 1e-12
+
+
+def test_barriers_respected():
+    """Fusion never crosses a fork/merge except the enumerated eltwise /
+    horizontal cases (paper §5.2)."""
+    g = make_toy_resnet_graph()
+    s = pathsearch.search(g, ZU2)
+    for grp in s.groups:
+        for a, b in zip(grp, grp[1:]):
+            assert a in g.nodes[b].inputs, f"non-adjacent fused {a},{b}"
+            # interior producers must have out-degree 1 (or be the eltwise
+            # absorption case where b is the merge itself)
+            if g.nodes[b].op != "eltwise_add":
+                assert len(g.consumers(a)) == 1
+
+
+def test_eltwise_absorbed_into_branch():
+    g = make_toy_resnet_graph()
+    s = pathsearch.search(g, ZU2)
+    fused_elt = [grp for grp in s.groups if "add1" in grp and len(grp) > 1]
+    assert fused_elt, "conv+eltwise fusion opportunity missed"
+
+
+def test_horizontal_at_fork():
+    g = make_toy_resnet_graph()
+    s = pathsearch.search(g, ZU2)
+    assert any(set(h) >= {"c2a", "c2s"} or set(h) >= {"c2s", "c2a"}
+               for h in s.horizontal), s.horizontal

@@ -1,0 +1,81 @@
+"""Int8 fixed-point semantics + calibration (paper C7)."""
+import jax.numpy as jnp
+import numpy as np
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.core import int8_ops, quantize
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(-2**20, 2**20), min_size=1, max_size=16),
+       st.integers(0, 12))
+def test_round_shift_half_away(vals, s):
+    x = jnp.asarray(vals, jnp.int32)
+    got = np.asarray(int8_ops.round_shift(x, s))
+    want = np.sign(vals) * ((np.abs(vals) + (1 << max(s - 1, 0)) * (s > 0)) >> s) \
+        if s > 0 else np.asarray(vals)
+    np.testing.assert_array_equal(got, want.astype(np.int32))
+
+
+def test_round_shift_negative_is_left_shift():
+    x = jnp.asarray([1, -3, 7], jnp.int32)
+    np.testing.assert_array_equal(
+        np.asarray(int8_ops.round_shift(x, -2)), [4, -12, 28])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.floats(0.01, 1000.0))
+def test_best_fraction_brackets_range(amax):
+    data = np.array([amax, -amax / 3, amax / 7], np.float32)
+    f = quantize.best_fraction(data)
+    q = quantize.quantize_to(data, f)
+    # max magnitude uses a healthy part of the int8 range, never overflows
+    assert 32 <= abs(int(q[0])) <= 127, (amax, f, q)
+    # reconstruction error bounded by one quantization step
+    assert abs(q[0] * 2.0 ** -f - amax) <= 2.0 ** -f
+
+
+def test_fold_bn_matches_float():
+    rng = np.random.default_rng(0)
+    w = rng.standard_normal((3, 3, 4, 8)).astype(np.float32)
+    b = rng.standard_normal(8).astype(np.float32)
+    bn = dict(gamma=rng.uniform(0.5, 2, 8), beta=rng.standard_normal(8),
+              mean=rng.standard_normal(8), var=rng.uniform(0.5, 2, 8), eps=1e-5)
+    wf, bf = quantize.fold_conv_intrinsics(w, b, [("bn", bn)])
+    x = rng.standard_normal((1, 8, 8, 4)).astype(np.float32)
+    import jax
+
+    y_ref = jax.lax.conv_general_dilated(
+        x, w, (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b
+    y_ref = (y_ref - bn["mean"]) / np.sqrt(bn["var"] + 1e-5) * bn["gamma"] + bn["beta"]
+    y_fold = jax.lax.conv_general_dilated(
+        x, wf, (1, 1), [(1, 1), (1, 1)],
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + bf
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_fold),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_eltwise_rescale_alignment():
+    a = jnp.asarray([[100]], jnp.int8)   # f=4 => 6.25
+    b = jnp.asarray([[40]], jnp.int8)    # f=2 => 10.0
+    out = int8_ops.eltwise_add([a, b], [4, 2], 2)
+    # 6.25 + 10.0 = 16.25 at f=2 => 65
+    assert int(out[0, 0]) == 65
+
+
+def test_int8_conv_vs_numpy():
+    rng = np.random.default_rng(1)
+    x = rng.integers(-128, 128, (1, 6, 6, 3)).astype(np.int8)
+    w = rng.integers(-128, 128, (3, 3, 3, 4)).astype(np.int8)
+    b = rng.integers(-1000, 1000, 4).astype(np.int32)
+    y = np.asarray(int8_ops.conv2d(jnp.asarray(x), jnp.asarray(w),
+                                   jnp.asarray(b), pad=(1, 1), shift=5,
+                                   relu=True))
+    # manual accumulation at one position
+    xp = np.pad(x.astype(np.int32), ((0, 0), (1, 1), (1, 1), (0, 0)))
+    acc = (xp[0, 2:5, 3:6, :, None] * w[:, :, :, :].astype(np.int32)).sum((0, 1, 2)) + b
+    want = np.clip(np.maximum(np.sign(acc) * ((np.abs(acc) + 16) >> 5), 0),
+                   -128, 127).astype(np.int8)
+    np.testing.assert_array_equal(y[0, 2, 3], want)

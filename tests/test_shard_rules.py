@@ -1,0 +1,91 @@
+"""Sharding-rule unit tests (pure logic, no mesh needed) + HLO analysis."""
+from jax.sharding import PartitionSpec as P
+
+from repro.launch.hlo_analysis import collective_stats
+from repro.launch.shard import param_spec, zero1_spec
+from repro.core import lm_bridge
+from repro import configs
+
+
+def test_param_spec_tp_rules():
+    # llama wq (L, D, H*hd): H*hd = 16384 divisible by 16 -> last dim
+    assert param_spec("layers/wq", (126, 16384, 16384), 16) == \
+        P(None, None, "model")
+    # embed (V, D)
+    assert param_spec("embed", (128256, 16384), 16) == P("model", None)
+    # norms replicate
+    assert param_spec("layers/ln1", (126, 16384), 16) == P()
+    # smollm attention: 15*64=960 and d=960 are divisible by 16 -> sharded
+    assert param_spec("layers/wq", (32, 960, 960), 16) == P(None, None, "model")
+    # row-parallel weights shard the CONTRACTION dim (Megatron):
+    assert param_spec("layers/w2", (126, 53248, 16384), 16) == \
+        P(None, "model", None)
+    assert param_spec("layers/wo", (126, 16384, 16384), 16) == \
+        P(None, "model", None)
+    assert param_spec("mlstm/w_down", (42, 4096, 2048), 16) == \
+        P(None, "model", None)
+    # a truly non-divisible trailing dim falls back to an earlier dim
+    assert param_spec("layers/w_qkg", (42, 4096, 8200), 16) == \
+        P(None, "model", None)
+    # nothing divisible -> replicate
+    assert param_spec("layers/odd", (3, 7, 11), 16) == P()
+
+
+def test_zero1_adds_data_axis():
+    ps = param_spec("layers/w1", (126, 16384, 53248), 16)
+    zs = zero1_spec(ps, (126, 16384, 53248), 16)
+    assert zs == P(None, "data", "model")
+    # already fully sharded dims are left alone
+    zs2 = zero1_spec(P("model", None), (128256, 16384), 16)
+    assert zs2 == P("model", "data")
+
+
+HLO_FIXTURE = """\
+HloModule test
+
+%body.1 (p: (s32[], f32[128])) -> (s32[], f32[128]) {
+  %ar = f32[128]{0} all-reduce(%x), channel_id=1, replica_groups=[16,16]<=[256], to_apply=%sum
+  ROOT %t = tuple(%i, %ar)
+}
+
+%cond.1 (p: (s32[], f32[128])) -> pred[] {
+  %iv = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(32)
+  ROOT %cmp = pred[] compare(%iv, %c), direction=LT
+}
+
+ENTRY %main (a: f32[128]) -> f32[128] {
+  %ag = f32[256,64]{1,0} all-gather(%a), channel_id=2, replica_groups=[16,16]<=[256], dimensions={0}
+  %w = (s32[], f32[128]) while(%init), condition=%cond.1, body=%body.1
+  ROOT %r = f32[128] get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_collective_stats_loop_trip_counts():
+    st = collective_stats(HLO_FIXTURE)
+    # all-gather outside the loop: 256*64*4 bytes * (15/16)
+    ag = int(256 * 64 * 4 * 15 / 16)
+    # all-reduce inside a 32-trip while: 128*4 * 2*(15/16) * 32
+    ar = int(128 * 4 * 2 * 15 / 16) * 32
+    assert st["bytes_by_op"]["all-gather"] == ag
+    assert abs(st["bytes_by_op"]["all-reduce"] - ar) <= 32
+    assert st["counts"] == {"all-gather": 1, "all-reduce": 1}
+
+
+def test_lm_bridge_planner_decisions():
+    """The DNNVM planner (condition 1 + cost) must pick the fused flash
+    kernel at long sequence for attention archs and a VMEM-feasible chunk
+    for SSM archs."""
+    g8 = configs.get("granite-8b")
+    plan = lm_bridge.plan_attention(g8, seq_len=32768, batch_per_device=1)
+    assert plan.fused and plan.blk_q >= 8
+    assert plan.fused_cost_s < plan.unfused_cost_s
+    # short sequences: the score matrix is small, either choice is
+    # admissible but cost ordering must be consistent
+    short = lm_bridge.plan_attention(g8, seq_len=128, batch_per_device=1)
+    assert short.fused_cost_s <= short.unfused_cost_s
+
+    x = configs.get("xlstm-1.3b")
+    L = lm_bridge.plan_ssm_chunk(x, 4096)
+    assert 16 <= L <= 512 and 4096 % L == 0

@@ -1,0 +1,60 @@
+"""Time-wheel simulator semantics (paper C5/C6)."""
+from repro.core import isa, simulator
+from repro.core.cost import AnalyticEvaluator, SimulatorEvaluator
+from repro.core.isa import Instr
+from repro.hw import ZU2
+from tests.conftest import make_toy_resnet_graph
+
+
+def test_dependencies_and_engine_order():
+    instrs = [
+        Instr(0, "DDR_RD", "LOAD", 10),
+        Instr(1, "CONV", "CONV", 100, (0,)),
+        Instr(2, "DDR_RD", "LOAD", 10),          # overlaps CONV (double buffer)
+        Instr(3, "CONV", "CONV", 100, (2,)),
+        Instr(4, "DDR_WR", "SAVE", 10, (3,)),
+    ]
+    rep = simulator.run(instrs)
+    # loads: 0-10, 10-20; convs: 10-110, 110-210; save: 210-220
+    assert rep.total_cycles == 220
+    assert rep.busy_cycles["CONV"] == 200
+
+
+def test_load_overlaps_save_full_duplex():
+    instrs = [
+        Instr(0, "DDR_RD", "LOAD", 50),
+        Instr(1, "DDR_WR", "SAVE", 50),          # independent: overlaps
+    ]
+    assert simulator.run(instrs).total_cycles == 50
+
+
+def test_fused_no_slower_than_unfused():
+    g = make_toy_resnet_graph()
+    sim = SimulatorEvaluator(g, ZU2)
+    assert sim(["c3", "p1"]) <= sim(["c3"]) + sim(["p1"]) + 1e-12
+    assert sim(["c2b", "add1"]) <= sim(["c2b"]) + sim(["add1"]) + 1e-12
+
+
+def test_strategy_report_engine_utilization():
+    g = make_toy_resnet_graph()
+    from repro.core import pathsearch
+
+    s = pathsearch.search(g, ZU2)
+    sim = SimulatorEvaluator(g, ZU2)
+    rep = sim.strategy_report(s)
+    assert rep.total_cycles > 0
+    assert 0.0 < rep.utilization("CONV") <= 1.0
+    # total >= the busiest engine's occupancy
+    assert rep.total_cycles >= max(rep.busy_cycles.values())
+
+
+def test_dataflow_deps_let_branches_overlap():
+    """Independent Inception-style branches overlap their engines."""
+    g = make_toy_resnet_graph()
+    ana = AnalyticEvaluator(g, ZU2)
+    groups = [["c1"], ["c2a"], ["c2s"], ["c2b"], ["add1"], ["c3"], ["p1"], ["fc1"]]
+    tilings = [ana.cost(grp).tiling for grp in groups]
+    instrs = isa.emit_strategy(g, groups, tilings, ZU2)
+    rep = simulator.run(instrs)
+    serial = sum(ana(grp) for grp in groups)
+    assert rep.seconds(ZU2.freq_hz) <= serial * 1.05

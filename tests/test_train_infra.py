@@ -1,0 +1,165 @@
+"""Training loop, optimizer, grad accumulation, compression, checkpointing,
+data pipeline, fault-tolerance plumbing."""
+import dataclasses
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.checkpoint.store import CheckpointStore
+from repro.data.pipeline import SyntheticLM
+from repro.distributed.health import HeartbeatMonitor, RetryPolicy, run_with_retries
+from repro.launch.train import abstract_state, init_state, make_train_step
+from repro.models import api
+from repro.optim import compress
+from repro.optim.adamw import AdamWConfig
+
+
+CFG = dataclasses.replace(configs.get("smollm-360m").smoke(), n_layers=2)
+
+
+def _data(cfg, batch=4, seq=64):
+    return SyntheticLM(vocab=cfg.vocab, batch=batch, seq=seq)
+
+
+def test_loss_decreases():
+    data = _data(CFG)
+    state = init_state(CFG)
+    step = jax.jit(make_train_step(CFG, AdamWConfig(lr=3e-3, warmup_steps=5)))
+    losses = []
+    for _ in range(30):
+        state, m = step(state, data.next())
+        losses.append(float(m["loss"]))
+    assert np.mean(losses[-5:]) < np.mean(losses[:5]) - 0.2, losses[:3] + losses[-3:]
+
+
+def test_grad_accum_equivalent():
+    """ga=4 over batch 8 == ga=1 same batch (fp32 accumulation)."""
+    data = _data(CFG, batch=8)
+    batch = data.next()
+    state = init_state(CFG)
+    s1 = jax.jit(make_train_step(CFG, grad_accum=1))(state, batch)
+    s4 = jax.jit(make_train_step(CFG, grad_accum=4))(state, batch)
+    # microbatch means != full-batch mean only through numerical association;
+    # losses and updated params must agree tightly in fp32
+    assert abs(float(s1[1]["loss"]) - float(s4[1]["loss"])) < 1e-4
+    p1 = jax.tree.leaves(s1[0]["params"])
+    p4 = jax.tree.leaves(s4[0]["params"])
+    for a, b in zip(p1, p4):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   rtol=2e-3, atol=2e-4)
+
+
+def test_compression_error_feedback():
+    rng = np.random.default_rng(0)
+    g = {"w": jnp.asarray(rng.standard_normal((32, 32)), jnp.float32)}
+    err = compress.init_error(g)
+    deq1, err1 = compress.quantize_ef(g, err)
+    # error feedback: g = deq + err exactly
+    np.testing.assert_allclose(np.asarray(deq1["w"] + err1["w"]),
+                               np.asarray(g["w"]), rtol=1e-6, atol=1e-6)
+    # telescoping: deq1 + deq2 = 2g - err2, so the CUMULATIVE quantization
+    # bias stays bounded by one quantization step regardless of horizon
+    deq2, err2 = compress.quantize_ef(g, err1)
+    np.testing.assert_allclose(np.asarray(deq1["w"] + deq2["w"]),
+                               np.asarray(2 * g["w"] - err2["w"]),
+                               rtol=1e-5, atol=1e-5)
+    step = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(err2["w"]))) <= 1.5 * step
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = init_state(CFG)
+    store = CheckpointStore(str(tmp_path))
+    store.save(state, step=7)
+    restored, step = store.restore_latest(jax.eval_shape(lambda: state))
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(state), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_checkpoint_async_and_gc(tmp_path):
+    state = init_state(CFG)
+    store = CheckpointStore(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        store.save(state, step=s, async_write=True)
+        store.wait()
+    assert store.steps() == [3, 4]
+
+
+def test_checkpoint_crash_safety(tmp_path):
+    """A checkpoint without COMMITTED is invisible."""
+    state = init_state(CFG)
+    store = CheckpointStore(str(tmp_path))
+    p = store.save(state, step=1)
+    os.remove(os.path.join(p, "COMMITTED"))
+    assert store.steps() == []
+    assert store.restore_latest(jax.eval_shape(lambda: state)) is None
+
+
+def test_retry_driver_resumes_from_checkpoint(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    state = init_state(CFG)
+    abstract = jax.eval_shape(lambda: state)
+    calls = {"n": 0}
+
+    def run(st, start):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            store.save(st, step=13)
+            raise RuntimeError("simulated host failure")
+        return st, start
+
+    policy = RetryPolicy(max_restarts=3)
+    _, start = run_with_retries(lambda: state, run, store, policy, abstract)
+    assert start == 13 and calls["n"] == 2
+
+
+def test_retry_budget_exhausts():
+    policy = RetryPolicy(max_restarts=1, window_s=1000)
+    assert policy.should_retry()
+    policy.record()
+    assert not policy.should_retry()
+
+
+def test_heartbeat_and_stragglers():
+    t = [0.0]
+    mon = HeartbeatMonitor(timeout_s=10, clock=lambda: t[0])
+    for h in ("h0", "h1", "h2", "h3"):
+        mon.beat(h, step_time_s=1.0)
+    mon.beat("h3", step_time_s=1.0)
+    for _ in range(8):
+        mon.beat("h2", step_time_s=5.0)      # slow host
+    assert mon.stragglers() == ["h2"]
+    t[0] = 20.0
+    mon.beat("h0")
+    assert set(mon.dead()) == {"h1", "h2", "h3"}
+
+
+def test_data_determinism_and_seek():
+    d1 = SyntheticLM(vocab=100, batch=4, seq=16)
+    d2 = SyntheticLM(vocab=100, batch=4, seq=16)
+    a = [d1.next() for _ in range(3)]
+    d2.seek(2)
+    b = d2.next()
+    np.testing.assert_array_equal(np.asarray(a[2]["tokens"]),
+                                  np.asarray(b["tokens"]))
+
+
+def test_data_host_sharding_disjoint():
+    full = SyntheticLM(vocab=100, batch=8, seq=16)
+    h0 = SyntheticLM(vocab=100, batch=8, seq=16, host_index=0, host_count=2)
+    h1 = SyntheticLM(vocab=100, batch=8, seq=16, host_index=1, host_count=2)
+    b0, b1 = h0.next(), h1.next()
+    assert b0["tokens"].shape == (4, 16)
+    assert not np.array_equal(np.asarray(b0["tokens"]),
+                              np.asarray(b1["tokens"]))
+
+
+def test_moment_dtype_bf16():
+    state = init_state(CFG, AdamWConfig(moment_dtype="bfloat16"))
+    assert jax.tree.leaves(state["opt"]["m"])[0].dtype == jnp.bfloat16

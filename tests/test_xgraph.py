@@ -1,0 +1,79 @@
+"""XGraph IR + front-end lowering (paper C1)."""
+import pytest
+
+from repro.core import frontend
+from repro.core.xgraph import XGraph
+from tests.conftest import make_toy_resnet_graph
+
+
+def test_shape_inference_conv_pool():
+    g = XGraph()
+    g.input("x", (1, 224, 224, 3))
+    g.add("conv", "c", ("x",), oc=64, kernel=(7, 7), stride=(2, 2), pad="same")
+    assert g.shape("c") == (1, 112, 112, 64)
+    g.add("maxpool", "p", ("c",), kernel=(3, 3), stride=(2, 2), pad=(0, 0))
+    assert g.shape("p") == (1, 56, 56, 64)  # caffe ceil mode, pad 0
+    g.add("global_avgpool", "gap", ("p",))
+    assert g.shape("gap") == (1, 1, 1, 64)
+
+
+def test_macs_eq3():
+    """Paper Eq. 3: A_comp = 2 k_w k_h IC OC H W — Fig. 8's example is
+    0.32 GOPs."""
+    g = XGraph()
+    g.input("x", (1, 28, 28, 32))
+    g.add("conv", "c", ("x",), oc=256, kernel=(5, 5), stride=(1, 1), pad="same")
+    assert g.ops("c") == 2 * 5 * 5 * 32 * 256 * 28 * 28
+
+
+def test_frontend_pointwise_and_flatten():
+    g = make_toy_resnet_graph()
+    ops = {n.op for n in g}
+    assert "relu" not in ops, "relu must be fused to the nonlinear bit"
+    assert "flatten" not in ops, "NHWC flatten must be pruned"
+    assert g.nodes["c1"].attrs.get("relu") == "relu"
+    assert g.nodes["add1"].attrs.get("relu") == "relu"
+
+
+def test_frontend_tf_style_equivalence():
+    """Fine-grained TF-style chain collapses to one coarse conv (Fig. 4)."""
+    g = XGraph()
+    g.input("x", (1, 8, 8, 4))
+    frontend.tf_style_conv(g, "conv", "x", oc=8, kernel=3, relu=True)
+    frontend.lower(g)
+    assert [n.op for n in g] == ["input", "conv"]
+    node = g.nodes["conv"]
+    assert node.attrs.get("relu") and node.attrs["pad"] == (1, 1)
+    assert [("bias_add", {})] == [(o, {}) for o, _ in
+                                  node.attrs["folded_intrinsics"]][:1]
+
+
+def test_bn_fold_recorded():
+    g = XGraph()
+    g.input("x", (1, 8, 8, 4))
+    g.add("conv", "c", ("x",), oc=8, kernel=(3, 3), pad="same")
+    g.add("bn", "b", ("c",), gamma=2.0, beta=0.5, mean=0.1, var=1.0)
+    g.add("scale", "s", ("b",), alpha=3.0)
+    frontend.lower(g)
+    folded = g.nodes["c"].attrs["folded_intrinsics"]
+    assert [f[0] for f in folded] == ["bn", "scale"]
+
+
+def test_concat_folded_zero_cost():
+    g = XGraph()
+    g.input("x", (1, 8, 8, 4))
+    g.add("conv", "a", ("x",), oc=4, kernel=(1, 1), pad="same")
+    g.add("conv", "b", ("x",), oc=4, kernel=(1, 1), pad="same")
+    g.add("concat", "cat", ("a", "b"))
+    frontend.lower(g)
+    assert g.nodes["cat"].attrs.get("folded") is True
+    assert g.shape("cat") == (1, 8, 8, 8)
+
+
+def test_duplicate_and_unknown_nodes_rejected():
+    g = XGraph()
+    g.input("x", (1, 4, 4, 2))
+    with pytest.raises(ValueError):
+        g.input("x", (1, 4, 4, 2))
+    with pytest.raises(ValueError):
+        g.add("conv", "c", ("nope",), oc=2, kernel=(1, 1))
