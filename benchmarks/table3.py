@@ -58,6 +58,17 @@ def run_model(name: str, device="zu2", evaluator_kind: str = "simulator",
     opt = pathsearch.search(g, dev, evaluator=ev, device_of=dv)
     t_tune = (time.perf_counter() - t0) * 1e3
 
+    # memory planning + artifact compilation (cold, then plan-cache hit) —
+    # the data-layout half of the compiler the throughput columns ride on
+    from repro import asm
+    t0 = time.perf_counter()
+    art, _ = asm.PLAN_CACHE.get_or_compile(g, opt, dev)
+    t_compile_cold = (time.perf_counter() - t0) * 1e3
+    t0 = time.perf_counter()
+    _, cache_hit = asm.PLAN_CACHE.get_or_compile(g, opt, dev)
+    t_compile_hit = (time.perf_counter() - t0) * 1e3
+    assert cache_hit, "plan cache must hit on identical (graph, device, strategy)"
+
     # authoritative timing: the cycle simulator over the full strategy
     def sim_seconds(strategy):
         return sim.strategy_report(strategy).seconds(dev.freq_hz)
@@ -77,6 +88,11 @@ def run_model(name: str, device="zu2", evaluator_kind: str = "simulator",
         "n_embeddings": n_embeddings,
         "evaluation_ms": t_eval, "autotune_ms": t_tune,
         **{f"{k}_{m}": v for k, r in res.items() for m, v in r.items()},
+        "ddr_peak_mb": art.peak_ddr_bytes / 1e6,
+        "ddr_no_reuse_mb": art.mem_summary["no_reuse_bytes"] / 1e6,
+        "ddr_reuse_factor": art.reuse_factor,
+        "compile_cold_ms": t_compile_cold,
+        "compile_cached_ms": t_compile_hit,
         "speedup": res["baseline"]["sim_ms"] / res["optimized"]["sim_ms"],
         "greedy_speedup": res["baseline"]["sim_ms"] / res["greedy"]["sim_ms"],
         "util_baseline": res["baseline"]["gops"] * 1e9 / dev.peak_ops_per_s,
@@ -90,6 +106,11 @@ def run_model(name: str, device="zu2", evaluator_kind: str = "simulator",
               f"opt={out['optimized_gops']:6.1f} GOPs/s "
               f"speedup={out['speedup']:.3f}x (greedy {out['greedy_speedup']:.3f}x)"
               + (f" | paper: {p[0]}/{p[1]}/{p[2]} {p[2]/p[0]:.2f}x" if p else ""))
+        print(f"{'':10s} ddr_peak={out['ddr_peak_mb']:.2f}MB "
+              f"(no-reuse {out['ddr_no_reuse_mb']:.2f}MB, "
+              f"{out['ddr_reuse_factor']:.2f}x reuse) "
+              f"compile cold={out['compile_cold_ms']:.1f}ms "
+              f"cached={out['compile_cached_ms']:.2f}ms")
     return out
 
 
@@ -98,11 +119,14 @@ def main() -> None:
     rows = []
     for name in ("vgg16", "resnet50", "resnet152", "googlenet"):
         rows.append(run_model(name))
-    print("\nname,nodes,gen_ms,iso_ms,tune_ms,base_gops,greedy_gops,opt_gops,speedup")
+    print("\nname,nodes,gen_ms,iso_ms,tune_ms,base_gops,greedy_gops,opt_gops,speedup,"
+          "ddr_peak_mb,ddr_reuse,compile_cold_ms,compile_cached_ms")
     for r in rows:
         print(f"{r['model']},{r['nodes']},{r['graph_gen_ms']:.2f},{r['isomorphism_ms']:.2f},"
               f"{r['autotune_ms']:.2f},{r['baseline_gops']:.1f},{r['greedy_gops']:.1f},"
-              f"{r['optimized_gops']:.1f},{r['speedup']:.3f}")
+              f"{r['optimized_gops']:.1f},{r['speedup']:.3f},"
+              f"{r['ddr_peak_mb']:.2f},{r['ddr_reuse_factor']:.2f},"
+              f"{r['compile_cold_ms']:.1f},{r['compile_cached_ms']:.2f}")
 
 
 if __name__ == "__main__":

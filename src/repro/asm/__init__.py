@@ -1,0 +1,25 @@
+"""Assembler artifact layer (paper §3.2: "an assembler, a runtime supporter").
+
+``compile_strategy`` lowers a path-searched execution strategy into an
+addressed instruction stream (memory planner + ``core.isa``), audits it with
+the simulator's hazard oracle, and packages everything a runtime needs —
+instructions, execution groups, quantization metadata, memory-plan summary —
+into a single serializable :class:`CompiledArtifact` ("DNNVM object file",
+an npz).  ``PLAN_CACHE`` memoizes compilation by (graph, device, strategy)
+so repeated serving requests reload plans instead of recompiling.
+"""
+from repro.asm.artifact import (
+    CompiledArtifact,
+    PlanCache,
+    PLAN_CACHE,
+    compile_strategy,
+    graph_signature,
+    load_artifact,
+    save_artifact,
+    strategy_signature,
+)
+
+__all__ = [
+    "CompiledArtifact", "PlanCache", "PLAN_CACHE", "compile_strategy",
+    "graph_signature", "load_artifact", "save_artifact", "strategy_signature",
+]

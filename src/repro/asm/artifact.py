@@ -1,0 +1,325 @@
+"""The DNNVM object file: addressed instructions + plan + quantization.
+
+A :class:`CompiledArtifact` is the end product of the compiler: the ordered
+execution groups, the address-bearing instruction stream (DDR offsets, BRAM
+banks, dependency bits), the memory-plan summary, and — when compiled from a
+quantized model — the int8 weights/biases and radix positions.  It duck-types
+``pathsearch.Strategy`` (``.groups`` / ``.horizontal`` / ``.meta``) so the
+executor and validator consume it directly, and it serializes to a single
+``.npz`` with :func:`save_artifact` / :func:`load_artifact` — the graph rides
+along as JSON, so a loaded artifact is self-contained (no recompilation, no
+re-quantization).
+
+``PlanCache`` keys compilations by (graph signature, device, strategy
+signature, quantization fingerprint): the production-serving path compiles a
+model once and every later request is a dictionary hit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+
+import numpy as np
+
+from repro.core import simulator, tiling
+from repro.core.cost import AnalyticEvaluator
+from repro.core.isa import Instr, ENGINES, emit_strategy
+from repro.core.pathsearch import order_groups
+from repro.core.quantize import QuantizedModel
+from repro.core.xgraph import XGraph
+from repro.hw import DeviceModel, get_device
+from repro.memory import MemoryPlanError, plan_memory
+
+FORMAT_VERSION = 1
+_OPCODES = ("LOAD", "SAVE", "CONV", "POOL", "MISC", "END")
+# attrs whose JSON lists must come back as tuples (XGraph convention)
+_TUPLE_ATTRS = {"shape", "kernel", "stride", "dilation", "pad"}
+
+
+# ------------------------------------------------------------------ signatures
+def graph_signature(g: XGraph) -> str:
+    """Stable content hash of the graph's structure, attrs and shapes."""
+    payload = [(n.name, n.op, list(n.inputs), _safe_attrs(n.attrs),
+                list(g.shape(n.name))) for n in g]
+    return _sha(payload)
+
+
+def strategy_signature(strategy) -> str:
+    return _sha({"groups": list(strategy.groups),
+                 "horizontal": list(strategy.horizontal),
+                 "host": sorted(strategy.meta.get("host_nodes", []))})
+
+
+def quant_signature(qm: QuantizedModel | None) -> str:
+    if qm is None:
+        return "noquant"
+    # Radix positions plus a strided per-tensor digest: radix positions alone
+    # are not injective over weights (a fine-tune can keep every f_w), and
+    # hashing full hundred-MB weight sets on every cache lookup is too slow —
+    # shape + int sum + ~1K sampled elements per tensor distinguishes any
+    # realistic weight update at microsecond cost.
+    digests = {}
+    for name in sorted(qm.weights):
+        w = np.asarray(qm.weights[name])
+        flat = w.ravel()
+        sample = flat[::max(1, flat.size // 1024)]
+        digests[name] = [list(w.shape), str(w.dtype), int(flat.sum(dtype=np.int64)),
+                         hashlib.sha256(sample.tobytes()).hexdigest()[:12]]
+    return _sha({"f_a": dict(sorted(qm.f_a.items())),
+                 "f_w": dict(sorted(qm.f_w.items())),
+                 "w": digests})
+
+
+def _sha(obj) -> str:
+    return hashlib.sha256(
+        json.dumps(obj, sort_keys=True, default=str).encode()).hexdigest()[:16]
+
+
+def _safe_attrs(attrs: dict) -> dict:
+    """JSON-serializable attr subset; folded-intrinsic parameter blobs are
+    dropped (their numeric effect already lives in the quantized weights)."""
+    out = {}
+    for k, v in attrs.items():
+        if k == "folded_intrinsics":
+            continue
+        if isinstance(v, (list, tuple)):
+            v = [int(x) if isinstance(x, (int, np.integer)) else x for x in v]
+        elif isinstance(v, (np.integer,)):
+            v = int(v)
+        elif isinstance(v, (np.floating,)):
+            v = float(v)
+        elif not isinstance(v, (str, int, float, bool, type(None))):
+            continue
+        out[k] = v
+    return out
+
+
+def _untuple(k, v):
+    if isinstance(v, list) and (k in _TUPLE_ATTRS or
+                                all(isinstance(x, int) for x in v)):
+        return tuple(v)
+    return v
+
+
+# -------------------------------------------------------------------- artifact
+@dataclasses.dataclass
+class CompiledArtifact:
+    graph_sig: str
+    device: str
+    groups: list                    # chain groups (Strategy duck-typing)
+    horizontal: list
+    meta: dict                      # incl. host_nodes
+    exec_items: list                # ordered groups the instrs were emitted for
+    instrs: list                    # list[Instr], addressed
+    mem_summary: dict               # peak/no-reuse/reuse-factor/banks
+    graph_nodes: list               # JSON-safe node records for rebuild
+    f_a: dict
+    f_w: dict
+    weights: dict                   # node -> int8 ndarray ({} if planned w/o qm)
+    biases: dict                    # node -> int32 ndarray
+    sim_total_cycles: int = 0
+
+    @property
+    def peak_ddr_bytes(self) -> int:
+        return self.mem_summary["peak_bytes"]
+
+    @property
+    def reuse_factor(self) -> float:
+        return self.mem_summary["reuse_factor"]
+
+    def quantized_model(self) -> QuantizedModel:
+        needs_weights = any(nd["op"] in ("conv", "dilated_conv", "deconv",
+                                         "depthwise_conv", "fc")
+                            for nd in self.graph_nodes)
+        if not self.weights and needs_weights:
+            raise ValueError(
+                "artifact was compiled without a QuantizedModel (plan-only); "
+                "recompile with qm= to execute it")
+        return QuantizedModel(dict(self.weights), dict(self.biases),
+                              dict(self.f_w), dict(self.f_a))
+
+    def rebuild_graph(self) -> XGraph:
+        g = XGraph(self.meta.get("graph_name", "artifact"))
+        for nd in self.graph_nodes:
+            attrs = {k: _untuple(k, v) for k, v in nd["attrs"].items()}
+            g.add(nd["op"], nd["name"], tuple(nd["inputs"]), **attrs)
+        return g
+
+    def executor(self, g: XGraph | None = None, backend: str = "ref"):
+        from repro.core.executor import Int8Executor
+        return Int8Executor(g if g is not None else self.rebuild_graph(),
+                            self.quantized_model(), strategy=self,
+                            backend=backend)
+
+
+# ----------------------------------------------------------------- compilation
+def compile_strategy(g: XGraph, strategy, dev: DeviceModel,
+                     qm: QuantizedModel | None = None) -> CompiledArtifact:
+    """Lower ``strategy`` to an addressed, hazard-checked artifact."""
+    items = order_groups(g, [list(grp) for grp in strategy.groups] +
+                         [list(h) for h in strategy.horizontal])
+    hset = {tuple(h) for h in strategy.horizontal}
+    ana = AnalyticEvaluator(g, dev)
+    tilings = []
+    for grp in items:
+        t = (tiling.solve_horizontal(g, grp, dev) if tuple(grp) in hset
+             else ana.cost(grp).tiling)
+        if not t.feasible:
+            raise MemoryPlanError(f"group {grp} infeasible: {t.reason}")
+        tilings.append(t)
+
+    plan = plan_memory(g, items, tilings, dev)
+    instrs = emit_strategy(g, items, tilings, dev, plan=plan)
+    rep = simulator.check(instrs)   # hard-errors on any memory hazard
+
+    mem_summary = plan.summary()
+    mem_summary["banks"] = [
+        {"n_in": b.n_banks_in, "n_out": b.n_banks_out} for b in plan.banks]
+    return CompiledArtifact(
+        graph_sig=graph_signature(g),
+        device=dev.name,
+        groups=[list(grp) for grp in strategy.groups],
+        horizontal=[list(h) for h in strategy.horizontal],
+        meta={"host_nodes": list(strategy.meta.get("host_nodes", [])),
+              "graph_name": g.name},
+        exec_items=[list(grp) for grp in items],
+        instrs=instrs,
+        mem_summary=mem_summary,
+        graph_nodes=[{"name": n.name, "op": n.op, "inputs": list(n.inputs),
+                      "attrs": _safe_attrs(n.attrs)} for n in g],
+        f_a=dict(qm.f_a) if qm else {},
+        f_w=dict(qm.f_w) if qm else {},
+        weights={k: np.asarray(v) for k, v in qm.weights.items()} if qm else {},
+        biases={k: np.asarray(v) for k, v in qm.biases.items()} if qm else {},
+        sim_total_cycles=rep.total_cycles)
+
+
+# -------------------------------------------------------------- serialization
+def save_artifact(art: CompiledArtifact, path: str) -> None:
+    """One npz: instruction arrays + weight tensors + a JSON metadata block."""
+    n = len(art.instrs)
+    fields = np.zeros((n, 9), dtype=np.int64)
+    deps_flat, deps_off = [], [0]
+    tags = []
+    for i, ins in enumerate(art.instrs):
+        fields[i] = (ins.iid, ENGINES.index(ins.engine),
+                     _OPCODES.index(ins.opcode), ins.cycles, ins.ddr_addr,
+                     ins.ddr_len, ins.bank, ins.group_id, ins.tile)
+        deps_flat.extend(ins.deps)
+        deps_off.append(len(deps_flat))
+        tags.append(ins.tag)
+    meta = {
+        "format_version": FORMAT_VERSION,
+        "graph_sig": art.graph_sig,
+        "device": art.device,
+        "groups": art.groups,
+        "horizontal": art.horizontal,
+        "meta": art.meta,
+        "exec_items": art.exec_items,
+        "mem_summary": art.mem_summary,
+        "graph_nodes": art.graph_nodes,
+        "f_a": art.f_a,
+        "f_w": art.f_w,
+        "tags": tags,
+        "sim_total_cycles": art.sim_total_cycles,
+        "weight_nodes": sorted(art.weights),
+        "bias_nodes": sorted(art.biases),
+    }
+    arrays = {
+        "instr_fields": fields,
+        "deps_flat": np.asarray(deps_flat, dtype=np.int64),
+        "deps_off": np.asarray(deps_off, dtype=np.int64),
+        "meta_json": np.asarray(json.dumps(meta)),
+    }
+    for k, w in art.weights.items():
+        arrays[f"w::{k}"] = w
+    for k, b in art.biases.items():
+        arrays[f"b::{k}"] = b
+    with open(path, "wb") as f:
+        np.savez_compressed(f, **arrays)
+
+
+def load_artifact(path: str) -> CompiledArtifact:
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["meta_json"]))
+        if meta["format_version"] != FORMAT_VERSION:
+            raise ValueError(f"artifact format {meta['format_version']} != "
+                             f"{FORMAT_VERSION}")
+        fields = z["instr_fields"]
+        deps_flat = z["deps_flat"]
+        deps_off = z["deps_off"]
+        instrs = []
+        for i in range(fields.shape[0]):
+            iid, eng, opc, cyc, addr, ln, bank, gid, tile = (
+                int(x) for x in fields[i])
+            deps = tuple(int(d) for d in
+                         deps_flat[deps_off[i]:deps_off[i + 1]])
+            instrs.append(Instr(iid, ENGINES[eng], _OPCODES[opc], cyc,
+                                deps, tag=meta["tags"][i], ddr_addr=addr,
+                                ddr_len=ln, bank=bank, group_id=gid,
+                                tile=tile))
+        weights = {k: z[f"w::{k}"] for k in meta["weight_nodes"]}
+        # biases keyed independently: a weight node without a bias (or a
+        # bias-only correction) must survive the round trip
+        biases = {k: z[f"b::{k}"] for k in meta.get("bias_nodes",
+                                                    meta["weight_nodes"])}
+    return CompiledArtifact(
+        graph_sig=meta["graph_sig"], device=meta["device"],
+        groups=meta["groups"], horizontal=meta["horizontal"],
+        meta=meta["meta"], exec_items=meta["exec_items"], instrs=instrs,
+        mem_summary=meta["mem_summary"], graph_nodes=meta["graph_nodes"],
+        f_a=meta["f_a"], f_w=meta["f_w"], weights=weights, biases=biases,
+        sim_total_cycles=meta["sim_total_cycles"])
+
+
+# ---------------------------------------------------------------- plan cache
+class PlanCache:
+    """In-process memoization of compiled artifacts.
+
+    Keyed by (graph signature, device, strategy signature, quantization
+    fingerprint) — the serving path's "have we compiled this before?".
+    LRU-bounded: cached artifacts can pin large weight tensors, so a
+    long-running server evicts the least-recently-used plan past
+    ``maxsize`` instead of growing without bound."""
+
+    def __init__(self, maxsize: int = 64):
+        self._store: dict[tuple, CompiledArtifact] = {}
+        self.maxsize = maxsize
+        self.hits = 0
+        self.misses = 0
+
+    def key(self, g: XGraph, strategy, dev: DeviceModel,
+            qm: QuantizedModel | None = None) -> tuple:
+        return (graph_signature(g), dev.name, strategy_signature(strategy),
+                quant_signature(qm))
+
+    def get_or_compile(self, g: XGraph, strategy, dev: DeviceModel,
+                       qm: QuantizedModel | None = None
+                       ) -> tuple[CompiledArtifact, bool]:
+        k = self.key(g, strategy, dev, qm)
+        art = self._store.get(k)
+        if art is not None:
+            self._store[k] = self._store.pop(k)   # refresh LRU position
+            self.hits += 1
+            return art, True
+        art = compile_strategy(g, strategy, dev, qm=qm)
+        self._store[k] = art
+        self.misses += 1
+        while len(self._store) > self.maxsize:
+            self._store.pop(next(iter(self._store)))
+        return art, False
+
+    def clear(self) -> None:
+        self._store.clear()
+        self.hits = self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._store)
+
+
+PLAN_CACHE = PlanCache()
+
+
+def device_of_artifact(art: CompiledArtifact) -> DeviceModel:
+    return get_device(art.device)

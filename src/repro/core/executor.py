@@ -193,6 +193,9 @@ class Int8Executor:
 
     def __init__(self, g: XGraph, qm: QuantizedModel, strategy=None,
                  backend: str = "ref", interpret: bool = True):
+        """``strategy`` is anything with ``.groups`` / ``.horizontal`` /
+        ``.meta`` — a ``pathsearch.Strategy`` or a loaded
+        ``asm.CompiledArtifact`` (the plan-cache serving path)."""
         self.g, self.qm, self.backend = g, qm, backend
         if strategy is not None:
             # horizontal (shared-input) groups execute per-member: the sharing
@@ -242,7 +245,6 @@ class Int8Executor:
 def build_group_callable(g: XGraph, group: list, params_or_qm):
     """One group as a standalone jitted callable with random inputs — the
     'on-board' evaluator's unit of measurement."""
-    first = g.nodes[group[0]]
     in_names = list(dict.fromkeys(
         i for nm in group for i in g.nodes[nm].inputs
         if i not in group))

@@ -52,6 +52,10 @@ class GroupTiling:
     conv_cycles: int = 0       # CONV engine occupancy
     pool_cycles: int = 0       # POOL engine occupancy
     misc_cycles: int = 0       # MISC engine occupancy (eltwise/upsample/reorg)
+    # per-tile on-chip footprints (memory/banks.py ping-pong planning):
+    in_tile_bytes: int = 0     # one tile's ifmap + side-input slice in B_in
+    out_tile_bytes: int = 0    # one tile's ofmap slice in B_out
+    resident_bytes: int = 0    # full-channel intermediates pinned in B_out
     reason: str = ""
 
     @property
@@ -148,7 +152,9 @@ def solve(g: XGraph, group: list[str], dev: DeviceModel) -> GroupTiling:
     total_weight_bytes = sum(g.param_bytes(nm, eb) for nm in group)
     weights_fit = total_weight_bytes <= dev.buf_weights_bytes
 
-    def capacity_ok(t_w: int) -> bool:
+    def tile_footprint(t_w: int) -> tuple[int, int, int]:
+        """(ifmap+side bytes in B_in, ofmap bytes in B_out, resident
+        intermediates in B_out) for one tile of width ``t_w``."""
         # walk output -> input, tracking per-node tile extents
         w, h = t_w, t_h
         inter_bytes = 0
@@ -164,10 +170,14 @@ def solve(g: XGraph, group: list[str], dev: DeviceModel) -> GroupTiling:
         side_tile = sum(t_w * t_h * min(t_oc, g.shape(s)[3]) * eb
                         for s in side_inputs)
         out_tile = t_w * t_h * t_oc * eb
+        return in_tile + side_tile, out_tile, inter_bytes
+
+    def capacity_ok(t_w: int) -> bool:
+        in_tile, out_tile, inter_bytes = tile_footprint(t_w)
         w_need = (total_weight_bytes if weights_fit else
                   sum(min(g.param_bytes(nm, eb),
                           dev.ic_p * dev.oc_p * _kk(g, nm) * eb) for nm in group))
-        return (in_tile + side_tile <= dev.buf_in_bytes
+        return (in_tile <= dev.buf_in_bytes
                 and w_need <= dev.buf_weights_bytes
                 and out_tile + inter_bytes <= dev.buf_out_bytes)
 
@@ -230,13 +240,16 @@ def solve(g: XGraph, group: list[str], dev: DeviceModel) -> GroupTiling:
                       for nm in group
                       if g.nodes[nm].op in ("eltwise_add", "upsample", "reorg"))
 
+    in_tile_b, out_tile_b, resident_b = tile_footprint(t_w)
     return GroupTiling(
         True, t_w=t_w, t_h=t_h, t_oc=t_oc,
         n_spatial_tiles=n_spatial, n_oc_passes=n_oc_passes,
         load_bytes=int(load_bytes), weight_bytes=int(weight_traffic),
         save_bytes=int(save_bytes),
         conv_cycles=int(conv_cycles), pool_cycles=int(pool_cycles),
-        misc_cycles=int(misc_cycles))
+        misc_cycles=int(misc_cycles),
+        in_tile_bytes=int(in_tile_b), out_tile_bytes=int(out_tile_b),
+        resident_bytes=int(resident_b))
 
 
 def _kk(g: XGraph, name: str) -> int:
@@ -266,27 +279,56 @@ def solve_horizontal(g: XGraph, siblings: list[str], dev: DeviceModel) -> GroupT
         return GroupTiling(False, reason="a sibling is individually infeasible")
     src = g.producers(siblings[0])[0]
     in_bytes = g.fmap_bytes(src, eb)
-    # capacity at T_w=1 for every member simultaneously
     t_h = dev.h_p
-    in_tile = dev.ic_p * max(
-        _rf(g, s, 1, t_h)[0] * _rf(g, s, 1, t_h)[1] for s in siblings) * eb
     w_need = sum(min(g.param_bytes(s, eb), dev.ic_p * dev.oc_p * _kk(g, s) * eb)
                  for s in siblings)
-    out_tile = sum(1 * t_h * min(dev.oc_p, g.shape(s)[3]) * eb for s in siblings)
-    if (in_tile > dev.buf_in_bytes or w_need > dev.buf_weights_bytes
-            or out_tile > dev.buf_out_bytes):
+
+    def footprint(t_w: int) -> tuple[int, int]:
+        """Co-resident (B_in, B_out) bytes for one t_w-wide tile of every
+        member simultaneously — the shared input region plus each sibling's
+        output slice."""
+        in_tile = dev.ic_p * max(
+            _rf(g, s, t_w, t_h)[0] * _rf(g, s, t_w, t_h)[1]
+            for s in siblings) * eb
+        out_tile = sum(t_w * t_h * min(dev.oc_p, g.shape(s)[3]) * eb
+                       for s in siblings)
+        return in_tile, out_tile
+
+    def fits(t_w: int) -> bool:
+        in_tile, out_tile = footprint(t_w)
+        return in_tile <= dev.buf_in_bytes and out_tile <= dev.buf_out_bytes
+
+    if w_need > dev.buf_weights_bytes or not fits(1):
         return GroupTiling(False, reason="horizontal working set exceeds buffers")
+    # largest tile width at which all members co-reside (may be narrower than
+    # each member's standalone t_w — the price of sharing the buffers)
+    lo, hi = 1, min(p.t_w for p in parts)
+    while lo < hi:
+        mid = (lo + hi + 1) // 2
+        if fits(mid):
+            lo = mid
+        else:
+            hi = mid - 1
+    t_w = lo
+    in_tile, out_tile = footprint(t_w)
+    n_spatial = max(
+        math.ceil(g.shape(s)[2] / t_w) * math.ceil(g.shape(s)[1] / t_h)
+        * max(1, g.shape(s)[0]) for s in siblings)
     # input loaded once (the fusion win); reload only if no member keeps it
     reload = min(p.load_bytes // max(1, in_bytes) or 1 for p in parts)
     load = in_bytes * max(1, reload)
     return GroupTiling(
         True,
-        t_w=min(p.t_w for p in parts), t_h=t_h, t_oc=dev.oc_p,
-        n_spatial_tiles=max(p.n_spatial_tiles for p in parts),
+        t_w=t_w, t_h=t_h, t_oc=dev.oc_p,
+        n_spatial_tiles=max(n_spatial,
+                            max(p.n_spatial_tiles for p in parts)),
         n_oc_passes=max(p.n_oc_passes for p in parts),
         load_bytes=int(load),
         weight_bytes=sum(p.weight_bytes for p in parts),
         save_bytes=sum(p.save_bytes for p in parts),
         conv_cycles=sum(p.conv_cycles for p in parts),
         pool_cycles=sum(p.pool_cycles for p in parts),
-        misc_cycles=sum(p.misc_cycles for p in parts))
+        misc_cycles=sum(p.misc_cycles for p in parts),
+        in_tile_bytes=int(in_tile),
+        out_tile_bytes=int(out_tile),
+        resident_bytes=0)

@@ -59,3 +59,40 @@ def bit_exact(g: XGraph, qm: QuantizedModel, x: np.ndarray, strategy=None,
             p_err = float(np.mean((f - q) ** 2)) or 1e-12
             sqnr[k] = 10.0 * np.log10(p_sig / p_err)
     return ValidationReport(exact, len(ref), max_diff, sqnr)
+
+
+def artifact_round_trip(g: XGraph, qm: QuantizedModel, x: np.ndarray,
+                        strategy, dev, path: str,
+                        backend: str = "ref") -> ValidationReport:
+    """Memory-plan analogue of :func:`bit_exact`: compile ``strategy`` to a
+    DNNVM object file, save -> load, execute the *loaded* artifact on its
+    *rebuilt* graph, and require bit-identity with the in-memory plan's
+    execution (which itself must match the unfused oracle).  A single
+    differing int8 value anywhere fails the round trip."""
+    from repro.asm import (compile_strategy, graph_signature, load_artifact,
+                           save_artifact)
+
+    art = compile_strategy(g, strategy, dev, qm=qm)
+    save_artifact(art, path)
+    loaded = load_artifact(path)
+    # re-sign the *reconstructed* graph: catches any attr the npz round trip
+    # dropped or mangled, not just a corrupted stored string
+    assert graph_signature(loaded.rebuild_graph()) == art.graph_sig, \
+        "graph signature drifted through the artifact round trip"
+
+    mem = Int8Executor(g, qm, strategy=art, backend=backend)(x)
+    got = loaded.executor(backend=backend)(x)
+    ref = Int8Executor(g, qm, strategy=None, backend="ref")(x)
+    assert set(ref) == set(got) == set(mem), "output sets differ"
+    max_diff, exact = 0, True
+    for k in ref:
+        r = np.asarray(ref[k])
+        for o in (np.asarray(mem[k]), np.asarray(got[k])):
+            if r.dtype != o.dtype or not np.array_equal(r, o):
+                exact = False
+                if r.shape == o.shape:
+                    max_diff = max(max_diff, int(np.max(np.abs(
+                        r.astype(np.int64) - o.astype(np.int64)))))
+                else:
+                    max_diff = -1
+    return ValidationReport(exact, len(ref), max_diff, {})

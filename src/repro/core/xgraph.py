@@ -231,6 +231,18 @@ class XGraph:
         return 0
 
     # ----------------------------------------------------------- utilities
+    def is_chain(self, group: list) -> bool:
+        """True when ``group`` is a linear producer chain (or a single op)."""
+        return all(group[i] in self.nodes[group[i + 1]].inputs
+                   for i in range(len(group) - 1)) or len(group) == 1
+
+    def exposed_outputs(self, group: list) -> list:
+        """Nodes of an execution group whose feature maps land in DDR: a
+        chain exposes only its tail, a horizontal (sibling) group exposes
+        every member.  Shared by the assembler and the memory planner — the
+        two must agree or addresses go stale."""
+        return [group[-1]] if self.is_chain(group) else list(group)
+
     def validate(self) -> None:
         seen: set[str] = set()
         for node in self:

@@ -36,6 +36,11 @@ class DeviceModel:
     buf_out_bytes: int             # B_out
     dram_bw_bytes_per_s: float     # off-chip bandwidth (DDR / HBM)
     elem_bytes: int = 1            # int8 data path by default (paper §2.3.4)
+    # off-chip capacity + alignment for the memory planner (memory/planner.py):
+    # activation peak must fit ddr_bytes (0 => unbounded), buffers are placed
+    # at ddr_align boundaries (AXI burst alignment).
+    ddr_bytes: int = 0
+    ddr_align: int = 64
     # engine throughput (elements/cycle).  Calibrated against the paper's own
     # micro-timings (Fig. 8: 3x3 pool over 28x28x256 takes 0.242 ms => ~22
     # elems/cycle on ZU2; Fig. 9: eltwise-add over ~0.8 MB takes 0.833 ms =>
@@ -97,6 +102,7 @@ ZU2 = DeviceModel(
     buf_out_bytes=int(_ZU2_BRAM * 0.20),
     dram_bw_bytes_per_s=3.4e9,            # calibrated: see EXPERIMENTS.md §Repro
     peak_ops_override=380e9,              # paper's published ZU2 peak
+    ddr_bytes=2 * 1024 ** 3,              # 2 GB board DDR4
 )
 
 ZU9 = DeviceModel(
@@ -109,6 +115,7 @@ ZU9 = DeviceModel(
     dram_bw_bytes_per_s=6.0e9,            # paper §6.2.3 reports bandwidth
                                           # saturation on ZU9; calibrated
     peak_ops_override=4.05e12,            # paper's ZU9 peak (batch-3 engine)
+    ddr_bytes=4 * 1024 ** 3,              # 4 GB board DDR4
 )
 
 # --- TPU v5e ------------------------------------------------------------------
@@ -130,6 +137,8 @@ TPU_V5E = DeviceModel(
     ici_bw_bytes_per_s=50e9,
     peak_ops_override=197e12,
     pool_lanes=1024, misc_lanes=1024,      # VPU 8x128 lanes
+    ddr_bytes=16 * 1024 ** 3,              # 16 GB HBM
+    ddr_align=512,                         # HBM burst / lane-tile alignment
 )
 
 _DEVICES = {d.name: d for d in (ZU2, ZU9, TPU_V5E)}

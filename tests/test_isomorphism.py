@@ -1,6 +1,9 @@
 """Algorithm 1 (subgraph isomorphism) — validity + completeness (paper C2)."""
 import itertools
 
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -3,6 +3,7 @@ shape/stride/pool/eltwise sweep (interpret mode)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

@@ -2,6 +2,9 @@
 import itertools
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

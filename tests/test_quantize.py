@@ -1,6 +1,9 @@
 """Int8 fixed-point semantics + calibration (paper C7)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 import hypothesis.strategies as st
 from hypothesis import given, settings
 

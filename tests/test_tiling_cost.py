@@ -1,6 +1,9 @@
 """Tiling solver (Eq. 5/6) + cost model + CTC (Eq. 1/2) properties."""
 import math
 
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
 import hypothesis.strategies as st
 from hypothesis import given, settings
 
