@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test ci dev-deps bench-table3
+.PHONY: verify test ci test-multidevice dev-deps bench-table3
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -12,17 +12,19 @@ verify: dev-deps test
 test:
 	$(PY) -m pytest -x -q
 
-# CI gate: the compiler-pipeline suites.  The seed ships with known-failing
-# LM/training-layer tests (test_models / test_multidevice / test_train_infra,
-# plus one jax.sharding API drift in nn/layers.py reached via
-# test_flash_in_model_path — see CHANGES.md); excluding them keeps the gate
-# green-able and meaningful until those layers are repaired.
+# CI gate: the full suite except the multi-device subprocess tests.  The
+# jax.sharding/mesh API drift that broke the LM/training-layer tests on JAX
+# 0.4.37 (test_models / test_multidevice / test_train_infra /
+# test_kernels_flash::test_flash_in_model_path) is fixed by version-portable
+# guards — test_models and test_train_infra are back in the gate.
+# test_multidevice forces 8 host devices in subprocesses, which needs real
+# cores; on throttled 2-core CI boxes it can exceed any sane wall budget, so
+# it gates separately (make test-multidevice).
 ci: dev-deps
-	$(PY) -m pytest -q \
-		--ignore=tests/test_models.py \
-		--ignore=tests/test_multidevice.py \
-		--ignore=tests/test_train_infra.py \
-		--deselect tests/test_kernels_flash.py::test_flash_in_model_path
+	$(PY) -m pytest -q --ignore=tests/test_multidevice.py
+
+test-multidevice:
+	$(PY) -m pytest -q tests/test_multidevice.py
 
 bench-table3:
 	$(PY) benchmarks/table3.py

@@ -69,6 +69,10 @@ def run_model(name: str, device="zu2", evaluator_kind: str = "simulator",
     t_compile_hit = (time.perf_counter() - t0) * 1e3
     assert cache_hit, "plan cache must hit on identical (graph, device, strategy)"
 
+    # lowered-program audit: how much of the searched strategy actually runs
+    # fused, and the explicit reason for every group that does not
+    pm = art.program.meta
+
     # authoritative timing: the cycle simulator over the full strategy
     def sim_seconds(strategy):
         return sim.strategy_report(strategy).seconds(dev.freq_hz)
@@ -93,6 +97,11 @@ def run_model(name: str, device="zu2", evaluator_kind: str = "simulator",
         "ddr_reuse_factor": art.reuse_factor,
         "compile_cold_ms": t_compile_cold,
         "compile_cached_ms": t_compile_hit,
+        "fused_launches": pm["n_launches"],
+        "fused_coverage": art.fused_coverage,
+        "fallback_ratio": 1.0 - art.fused_coverage,
+        "fallback_reasons": {k: v for k, v in pm["fallback_reasons"].items()
+                             if k not in ("host_op", "folded_concat")},
         "speedup": res["baseline"]["sim_ms"] / res["optimized"]["sim_ms"],
         "greedy_speedup": res["baseline"]["sim_ms"] / res["greedy"]["sim_ms"],
         "util_baseline": res["baseline"]["gops"] * 1e9 / dev.peak_ops_per_s,
@@ -111,6 +120,11 @@ def run_model(name: str, device="zu2", evaluator_kind: str = "simulator",
               f"{out['ddr_reuse_factor']:.2f}x reuse) "
               f"compile cold={out['compile_cold_ms']:.1f}ms "
               f"cached={out['compile_cached_ms']:.2f}ms")
+        print(f"{'':10s} fused_launches={out['fused_launches']} "
+              f"coverage={out['fused_coverage']:.3f} "
+              f"fallback_ratio={out['fallback_ratio']:.3f}"
+              + (f" reasons={out['fallback_reasons']}"
+                 if out['fallback_reasons'] else ""))
     return out
 
 
@@ -120,13 +134,16 @@ def main() -> None:
     for name in ("vgg16", "resnet50", "resnet152", "googlenet"):
         rows.append(run_model(name))
     print("\nname,nodes,gen_ms,iso_ms,tune_ms,base_gops,greedy_gops,opt_gops,speedup,"
-          "ddr_peak_mb,ddr_reuse,compile_cold_ms,compile_cached_ms")
+          "ddr_peak_mb,ddr_reuse,compile_cold_ms,compile_cached_ms,"
+          "fused_launches,fused_coverage,fallback_ratio")
     for r in rows:
         print(f"{r['model']},{r['nodes']},{r['graph_gen_ms']:.2f},{r['isomorphism_ms']:.2f},"
               f"{r['autotune_ms']:.2f},{r['baseline_gops']:.1f},{r['greedy_gops']:.1f},"
               f"{r['optimized_gops']:.1f},{r['speedup']:.3f},"
               f"{r['ddr_peak_mb']:.2f},{r['ddr_reuse_factor']:.2f},"
-              f"{r['compile_cold_ms']:.1f},{r['compile_cached_ms']:.2f}")
+              f"{r['compile_cold_ms']:.1f},{r['compile_cached_ms']:.2f},"
+              f"{r['fused_launches']},{r['fused_coverage']:.3f},"
+              f"{r['fallback_ratio']:.3f}")
 
 
 if __name__ == "__main__":

@@ -2,11 +2,13 @@
 
 ``compile_strategy`` lowers a path-searched execution strategy into an
 addressed instruction stream (memory planner + ``core.isa``), audits it with
-the simulator's hazard oracle, and packages everything a runtime needs —
-instructions, execution groups, quantization metadata, memory-plan summary —
-into a single serializable :class:`CompiledArtifact` ("DNNVM object file",
-an npz).  ``PLAN_CACHE`` memoizes compilation by (graph, device, strategy)
-so repeated serving requests reload plans instead of recompiling.
+the simulator's hazard oracle, lowers the backend ``GroupProgram``
+(``core.lower``: fused-launch descriptors + reasoned fallbacks), and packages
+everything a runtime needs — instructions, program, execution groups,
+quantization metadata, memory-plan summary — into a single serializable
+:class:`CompiledArtifact` ("DNNVM object file", an npz, format v2).
+``PLAN_CACHE`` memoizes compilation by (graph, device, strategy, quant) so
+repeated serving requests reload plans instead of recompiling.
 """
 from repro.asm.artifact import (
     CompiledArtifact,

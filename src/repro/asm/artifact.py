@@ -1,14 +1,16 @@
 """The DNNVM object file: addressed instructions + plan + quantization.
 
 A :class:`CompiledArtifact` is the end product of the compiler: the ordered
-execution groups, the address-bearing instruction stream (DDR offsets, BRAM
-banks, dependency bits), the memory-plan summary, and — when compiled from a
-quantized model — the int8 weights/biases and radix positions.  It duck-types
+execution groups, the lowered :class:`~repro.core.lower.GroupProgram` (the
+backend's executable: fused-launch descriptors + reasoned fallbacks), the
+address-bearing instruction stream (DDR offsets, BRAM banks, dependency
+bits), the memory-plan summary, and — when compiled from a quantized model —
+the int8 weights/biases and radix positions.  It duck-types
 ``pathsearch.Strategy`` (``.groups`` / ``.horizontal`` / ``.meta``) so the
 executor and validator consume it directly, and it serializes to a single
-``.npz`` with :func:`save_artifact` / :func:`load_artifact` — the graph rides
-along as JSON, so a loaded artifact is self-contained (no recompilation, no
-re-quantization).
+``.npz`` with :func:`save_artifact` / :func:`load_artifact` — the graph and
+program ride along as JSON, so a loaded artifact is self-contained (no
+recompilation, no re-quantization, no re-lowering).
 
 ``PlanCache`` keys compilations by (graph signature, device, strategy
 signature, quantization fingerprint): the production-serving path compiles a
@@ -22,7 +24,7 @@ import json
 
 import numpy as np
 
-from repro.core import simulator, tiling
+from repro.core import lower, simulator, tiling
 from repro.core.cost import AnalyticEvaluator
 from repro.core.isa import Instr, ENGINES, emit_strategy
 from repro.core.pathsearch import order_groups
@@ -31,7 +33,10 @@ from repro.core.xgraph import XGraph
 from repro.hw import DeviceModel, get_device
 from repro.memory import MemoryPlanError, plan_memory
 
-FORMAT_VERSION = 1
+# v2: adds the lowered GroupProgram section (launch descriptors + reasoned
+# fallbacks) — v1 artifacts predate compile-time lowering and cannot be
+# dispatched without re-pattern-matching, so loading them is refused.
+FORMAT_VERSION = 2
 _OPCODES = ("LOAD", "SAVE", "CONV", "POOL", "MISC", "END")
 # attrs whose JSON lists must come back as tuples (XGraph convention)
 _TUPLE_ATTRS = {"shape", "kernel", "stride", "dilation", "pad"}
@@ -119,6 +124,11 @@ class CompiledArtifact:
     weights: dict                   # node -> int8 ndarray ({} if planned w/o qm)
     biases: dict                    # node -> int32 ndarray
     sim_total_cycles: int = 0
+    program: lower.GroupProgram | None = None   # lowered backend program
+
+    @property
+    def fused_coverage(self) -> float:
+        return self.program.meta["coverage"] if self.program else 0.0
 
     @property
     def peak_ddr_bytes(self) -> int:
@@ -172,6 +182,7 @@ def compile_strategy(g: XGraph, strategy, dev: DeviceModel,
     plan = plan_memory(g, items, tilings, dev)
     instrs = emit_strategy(g, items, tilings, dev, plan=plan)
     rep = simulator.check(instrs)   # hard-errors on any memory hazard
+    program = lower.lower_strategy(g, strategy, qm)
 
     mem_summary = plan.summary()
     mem_summary["banks"] = [
@@ -192,7 +203,8 @@ def compile_strategy(g: XGraph, strategy, dev: DeviceModel,
         f_w=dict(qm.f_w) if qm else {},
         weights={k: np.asarray(v) for k, v in qm.weights.items()} if qm else {},
         biases={k: np.asarray(v) for k, v in qm.biases.items()} if qm else {},
-        sim_total_cycles=rep.total_cycles)
+        sim_total_cycles=rep.total_cycles,
+        program=program)
 
 
 # -------------------------------------------------------------- serialization
@@ -225,6 +237,8 @@ def save_artifact(art: CompiledArtifact, path: str) -> None:
         "sim_total_cycles": art.sim_total_cycles,
         "weight_nodes": sorted(art.weights),
         "bias_nodes": sorted(art.biases),
+        "program": (lower.program_to_json(art.program)
+                    if art.program is not None else None),
     }
     arrays = {
         "instr_fields": fields,
@@ -264,13 +278,15 @@ def load_artifact(path: str) -> CompiledArtifact:
         # bias-only correction) must survive the round trip
         biases = {k: z[f"b::{k}"] for k in meta.get("bias_nodes",
                                                     meta["weight_nodes"])}
+    program = (lower.program_from_json(meta["program"])
+               if meta.get("program") is not None else None)
     return CompiledArtifact(
         graph_sig=meta["graph_sig"], device=meta["device"],
         groups=meta["groups"], horizontal=meta["horizontal"],
         meta=meta["meta"], exec_items=meta["exec_items"], instrs=instrs,
         mem_summary=meta["mem_summary"], graph_nodes=meta["graph_nodes"],
         f_a=meta["f_a"], f_w=meta["f_w"], weights=weights, biases=biases,
-        sim_total_cycles=meta["sim_total_cycles"])
+        sim_total_cycles=meta["sim_total_cycles"], program=program)
 
 
 # ---------------------------------------------------------------- plan cache

@@ -8,6 +8,11 @@ fused-kernel executor (interpret mode on this container, real MXU on TPU) is
 the hardware side.  ``bit_exact`` fails on a single differing int8 value.
 It also checks that *fusion itself* never changes numerics: any strategy must
 produce the same bits as the unfused naive execution.
+
+``fused_coverage`` audits the *lowering* the same way the bit-exactness bench
+audits numerics: what fraction of the strategy's groups actually execute as
+fused kernel launches, and an explicit reason for every group that does not
+(no silent fallback).
 """
 from __future__ import annotations
 
@@ -15,6 +20,7 @@ import dataclasses
 
 import numpy as np
 
+from repro.core import lower
 from repro.core.executor import Int8Executor, build_float_fn
 from repro.core.quantize import QuantizedModel
 from repro.core.xgraph import XGraph
@@ -29,6 +35,35 @@ class ValidationReport:
 
     def __bool__(self) -> bool:
         return self.bit_exact
+
+
+@dataclasses.dataclass
+class CoverageReport:
+    """How much of a strategy the compiler lowered to fused launches."""
+    n_groups: int            # strategy groups (excl. host + folded concat)
+    n_fused: int             # groups entirely covered by FusedLaunch items
+    n_launches: int
+    fallback_reasons: dict   # reason -> count (every entry allow-listed)
+    kinds: dict              # launch kind -> count
+
+    @property
+    def ratio(self) -> float:
+        return (self.n_fused / self.n_groups) if self.n_groups else 1.0
+
+
+def fused_coverage(g: XGraph, strategy, qm: QuantizedModel | None = None
+                   ) -> CoverageReport:
+    """Lower ``strategy`` (or read a CompiledArtifact's program) and report
+    the fused-execution coverage.  Every non-fused group must carry a reason
+    from ``lower.FALLBACK_REASONS`` — lowering raises otherwise."""
+    prog = getattr(strategy, "program", None)
+    if prog is None:
+        prog = lower.lower_strategy(g, strategy, qm)
+    m = prog.meta
+    return CoverageReport(
+        n_groups=m["n_units"], n_fused=m["n_fused_units"],
+        n_launches=m["n_launches"],
+        fallback_reasons=dict(m["fallback_reasons"]), kinds=dict(m["kinds"]))
 
 
 def bit_exact(g: XGraph, qm: QuantizedModel, x: np.ndarray, strategy=None,

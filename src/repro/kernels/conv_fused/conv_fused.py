@@ -1,34 +1,39 @@
-"""Pallas TPU kernel: fused int8 conv (+bias+requant+ReLU) (+maxpool|+eltwise).
+"""Pallas TPU kernel: fused int8 op-chain programs.
 
 This is the paper's fused-operation executed as ONE on-chip program — the
-LOAD/CONV/POOL/MISC/SAVE pipeline of Fig. 8/9 mapped to the TPU:
+LOAD/CONV/POOL/MISC/SAVE pipeline of Fig. 8/9 mapped to the TPU, generalized
+from single conv(+tail) patterns to whole lowered *chains*
+(``lower.FusedLaunch.stages``):
 
-* LOAD  -> Pallas grid DMA: the BlockSpecs below stage the padded input
-           image, the weight panel for the current oc tile and the bias slice
+* LOAD  -> Pallas grid DMA: BlockSpecs stage the padded input image, each
+           stage's weight panel and bias slice, and any eltwise side inputs
            into VMEM (double-buffered across grid steps by the Pallas
-           pipeline, the analogue of the paper's instruction-level overlap);
-* CONV  -> MXU matmuls: conv is computed as kh*kw shifted patch-matmuls
-           ((TH*OW, IC) @ (IC, TOC)) accumulated in int32 VMEM registers —
-           the TPU-native rethinking of the FPGA MAC-array loop nest
-           (DESIGN.md §2, adaptation note 1);
-* MISC  -> the requantize (+ReLU) and the optional fused tail (maxpool or
-           eltwise-add on a DMA'd side input) run on the VPU over the tile
-           still resident in VMEM — the intermediate NEVER touches HBM;
+           pipeline);
+* CONV  -> MXU matmuls: every conv stage is computed as kh*kw shifted
+           patch-matmuls accumulated in int32 — intermediate feature maps of
+           the chain stay resident in VMEM and NEVER touch HBM;
+* MISC  -> requantize (+ReLU), eltwise-add on a DMA'd side input, and
+           max/avg/global pooling run on the VPU over the resident tile;
 * SAVE  -> the output BlockSpec writes the finished int8 tile back.
 
-Tiling contract (chosen by ops.py, validated against the tiling solver):
-grid = (N, OH_t, OC_t); each cell produces the FINAL tile (TH, OW, TOC) —
-when pooling is fused, TH/OW are pool-output rows/cols and the conv stage
-computes the pool's receptive rows (recompute overlap when pool stride <
-kernel, documented).  Strided input rows are fetched with the
-slice-then-reshape trick so all indexing is lane-aligned.
+Coordinate convention (how padding/ceil semantics stay bit-exact): every
+tensor of the chain lives in *padded coordinates*.  Walking backward from the
+final output (offset 0), each stage with stride ``s`` and pad ``p`` maps its
+output offset ``Q`` to an input offset ``Q*s + p``; the external image is
+physically pre-padded by the accumulated offset (with the first stage's pad
+identity), and after each stage the kernel masks rows/cols falling outside
+the stage's true extent to the *consumer's* pad identity (0 for conv/eltwise/
+avg-sum, -128 for maxpool).  That reproduces exactly the reference semantics
+of zero-padded conv, -128-padded (and ceil-extended) maxpool, and zero-padded
+avgpool from ``int8_ops``.
 
-MXU alignment: TOC should be a multiple of 128 and TH*OW a multiple of 8 for
-peak efficiency on real hardware; correctness does not depend on it and the
-interpret-mode tests sweep ragged shapes too.
+Channel tiling: the grid's third axis tiles the FINAL conv's output channels
+(TOC); stages upstream of it compute full channels (a conv consumer needs
+all of them), stages downstream are channelwise and ride the TOC slice.
 
 Numerics are EXACTLY ``int8_ops``: int32 accumulate, round-half-away shift,
-saturate — the validation bench (validate.py) enforces bit-equality.
+saturate — validate.py enforces bit-equality.  The horizontal variant batches
+sibling convs over OC-stacked weights with *per-channel* shift/ReLU vectors.
 """
 from __future__ import annotations
 
@@ -37,6 +42,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+I8_MIN = -128
 
 
 def _round_shift(x, s: int):
@@ -49,131 +56,274 @@ def _round_shift(x, s: int):
     return jnp.sign(x) * r
 
 
+def _round_shift_vec(x, s):
+    """x (..., C) int32, s (C,) int32 per-channel shift (may be negative)."""
+    s = s.reshape((1,) * (x.ndim - 1) + (-1,))
+    sp = jnp.maximum(s, 1)
+    right = jnp.sign(x) * ((jnp.abs(x) + (1 << (sp - 1))) >> sp)
+    return jnp.where(s > 0, right, x << jnp.maximum(-s, 0))
+
+
 def _sat8(x):
     return jnp.clip(x, -128, 127).astype(jnp.int8)
 
 
-def _conv_tile(x_ref, w_ref, b_ref, *, kh, kw, sh, sw, th_c, ow_c, row0):
-    """int32 conv accumulator for th_c x ow_c x TOC starting at out-row row0."""
-    toc = w_ref.shape[-1]
-    ic = w_ref.shape[-2]
-    acc = jnp.zeros((th_c * ow_c, toc), jnp.int32)
-    for dh in range(kh):
-        for dw in range(kw):
-            # rows row0*sh+dh .. step sh, th_c of them  (slice-reshape stride)
-            rows = x_ref[0, pl.dslice(row0 * sh + dh, th_c * sh)]
-            rows = rows.reshape(th_c, sh, *rows.shape[1:])[:, 0]
-            cols = jax.lax.slice_in_dim(rows, dw, dw + ow_c * sw, axis=1)
-            cols = cols.reshape(th_c, ow_c, sw, ic)[:, :, 0]
-            patch = cols.reshape(th_c * ow_c, ic).astype(jnp.int32)
-            wmat = w_ref[dh, dw].astype(jnp.int32)
-            acc = acc + jnp.dot(patch, wmat, preferred_element_type=jnp.int32)
-    return (acc + b_ref[...].astype(jnp.int32)[None, :]).reshape(th_c, ow_c, toc)
+# ------------------------------------------------------------ static geometry
+def _stage_geom(st):
+    """(ekh, ekw, sh, sw, ph, pw) of one stage spec."""
+    if st[0] == "conv":
+        _, _, kh, kw, sh, sw, ph, pw, dh, dw = st[:10]
+        return (dh * (kh - 1) + 1, dw * (kw - 1) + 1, sh, sw, ph, pw)
+    if st[0] == "pool":
+        _, _, _, kph, kpw, sph, spw, pph, ppw = st[:9]
+        return (kph, kpw, sph, spw, pph, ppw)
+    return (1, 1, 1, 1, 0, 0)   # elt
 
 
-def _kernel_plain(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sh, sw, th, ow,
-                  shift, relu):
-    r0 = pl.program_id(1) * th
-    acc = _conv_tile(x_ref, w_ref, b_ref, kh=kh, kw=kw, sh=sh, sw=sw,
-                     th_c=th, ow_c=ow, row0=r0)
+def _fill_of(st) -> int:
+    """Pad identity a stage wants on its *input*."""
+    return I8_MIN if (st[0] == "pool" and st[2] == "max") else 0
+
+
+def chain_geometry(chain, th: int, oh: int, ow: int) -> dict:
+    """Static tile geometry of a lowered chain.
+
+    Shared by the kernel body (trace-time python) and the launcher (physical
+    padding); the two must agree or masking goes stale.
+    """
+    m = len(chain)
+    rows = [0] * m
+    cols = [0] * m
+    fout = [0] * m           # padded row-offset factor of stage i's output
+    q = [(0, 0)] * m         # padded-coordinate offset of stage i's output
+    r, c, f, qq = th, ow, th, (0, 0)
+    for i in range(m - 1, -1, -1):
+        rows[i], cols[i], fout[i], q[i] = r, c, f, qq
+        ekh, ekw, sh, sw, ph, pw = _stage_geom(chain[i])
+        r = (r - 1) * sh + ekh
+        c = (c - 1) * sw + ekw
+        f = f * sh
+        qq = (qq[0] * sh + ph, qq[1] * sw + pw)
+    n_tiles = oh // th
+    sides = []
+    for i, st in enumerate(chain):
+        if st[0] == "elt":
+            q_in = q[i]      # elt: input coords == output coords
+            sides.append({"q": q_in, "rows": rows[i], "cols": cols[i],
+                          "h_req": (n_tiles - 1) * fout[i] + rows[i],
+                          "w_req": cols[i], "f": fout[i]})
+    return {
+        "in_rows": r, "in_cols": c, "f_in": f, "q_in": qq,
+        "h_req": (n_tiles - 1) * f + r, "w_req": c,
+        "rows": rows, "cols": cols, "fout": fout, "q": q,
+        "fill0": _fill_of(chain[0]) if chain else 0,
+        "sides": sides,
+    }
+
+
+# ------------------------------------------------------------------- kernels
+def _conv_apply(t, w_ref, b_ref, st, out_r, out_c):
+    _, _, kh, kw, sh, sw, _, _, dh, dw, shift, relu = st[:12]
+    in_r, in_c, ic = t.shape
+    acc = jnp.zeros((out_r * out_c, w_ref.shape[-1]), jnp.int32)
+    for i in range(kh):
+        for j in range(kw):
+            sl = jax.lax.slice(
+                t, (i * dh, j * dw, 0),
+                (i * dh + (out_r - 1) * sh + 1,
+                 j * dw + (out_c - 1) * sw + 1, ic),
+                (sh, sw, 1))
+            acc = acc + jnp.dot(sl.reshape(out_r * out_c, ic),
+                                w_ref[i, j].astype(jnp.int32),
+                                preferred_element_type=jnp.int32)
+    acc = acc + b_ref[...].astype(jnp.int32)[None, :]
     y = _round_shift(acc, shift)
     if relu:
         y = jnp.maximum(y, 0)
-    o_ref[0] = _sat8(y)
+    return jnp.clip(y, -128, 127).reshape(out_r, out_c, -1)
 
 
-def _kernel_pool(x_ref, w_ref, b_ref, o_ref, *, kh, kw, sh, sw, th, ow,
-                 shift, relu, kp, sp, ow_c):
-    # th/ow are POOL-output tile dims; conv stage covers the receptive rows
-    th_c = (th - 1) * sp + kp
-    r0 = pl.program_id(1) * th * sp  # conv out-row of this pool tile's top
-    acc = _conv_tile(x_ref, w_ref, b_ref, kh=kh, kw=kw, sh=sh, sw=sw,
-                     th_c=th_c, ow_c=ow_c, row0=r0)
-    y = _round_shift(acc, shift)
-    if relu:
-        y = jnp.maximum(y, 0)
-    y = jnp.clip(y, -128, 127)
-    # maxpool on the resident tile (VPU stage) — window max via shifted slices
-    toc = y.shape[-1]
-    best = jnp.full((th, ow, toc), -(2 ** 31 - 1), jnp.int32)
-    for ph in range(kp):
-        for pw_ in range(kp):
-            win = jax.lax.slice(y, (ph, pw_, 0),
-                                (ph + (th - 1) * sp + 1, pw_ + (ow - 1) * sp + 1, toc),
-                                (sp, sp, 1))
-            best = jnp.maximum(best, win)
-    o_ref[0] = best.astype(jnp.int8)
+def _pool_apply(t, st, out_r, out_c):
+    _, _, pkind, kph, kpw, sph, spw = st[:7]
+    cnt = st[11]
+    c = t.shape[-1]
+    if pkind == "max":
+        best = None
+        for i in range(kph):
+            for j in range(kpw):
+                win = jax.lax.slice(
+                    t, (i, j, 0),
+                    (i + (out_r - 1) * sph + 1, j + (out_c - 1) * spw + 1, c),
+                    (sph, spw, 1))
+                best = win if best is None else jnp.maximum(best, win)
+        return best
+    if pkind == "gap":
+        s = jnp.sum(t, axis=(0, 1), keepdims=True)
+    else:
+        s = None
+        for i in range(kph):
+            for j in range(kpw):
+                win = jax.lax.slice(
+                    t, (i, j, 0),
+                    (i + (out_r - 1) * sph + 1, j + (out_c - 1) * spw + 1, c),
+                    (sph, spw, 1))
+                s = win if s is None else s + win
+    return jnp.sign(s) * ((jnp.abs(s) + cnt // 2) // cnt)
 
 
-def _kernel_eltwise(x_ref, w_ref, b_ref, side_ref, o_ref, *, kh, kw, sh, sw,
-                    th, ow, shift, relu, s_conv, s_side, relu_out):
-    r0 = pl.program_id(1) * th
-    acc = _conv_tile(x_ref, w_ref, b_ref, kh=kh, kw=kw, sh=sh, sw=sw,
-                     th_c=th, ow_c=ow, row0=r0)
-    y = _round_shift(acc, shift)          # conv result at its own fraction
-    if relu:
-        y = jnp.maximum(y, 0)
-    y = jnp.clip(y, -128, 127)
-    # eltwise-add: rescale both operands to the output fraction, add, saturate
-    side = side_ref[0].astype(jnp.int32)
-    z = _round_shift(y, s_conv) + _round_shift(side, s_side)
+def _elt_apply(t, side, st):
+    _, _, s_main, s_side, relu_out = st[:5]
+    z = _round_shift(t, s_main) + _round_shift(side, s_side)
     if relu_out:
         z = jnp.maximum(z, 0)
-    o_ref[0] = _sat8(z)
+    return jnp.clip(z, -128, 127)
 
 
-def fused_conv_pallas(x_pad, w, b, *, stride, shift, relu,
-                      th, toc, oh, ow, pool=None, eltwise=None,
-                      interpret=True):
-    """Launch the fused kernel.
+def _mask(t, row0, q, true_h, true_w, fill):
+    out_r, out_c, _ = t.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (out_r, out_c, 1), 0) + row0
+    cols = jax.lax.broadcasted_iota(jnp.int32, (out_r, out_c, 1), 1)
+    valid = ((rows >= q[0]) & (rows < q[0] + true_h)
+             & (cols >= q[1]) & (cols < q[1] + true_w))
+    return jnp.where(valid, t, fill)
 
-    x_pad: (N, Hp, Wp, IC) int8, already padded (pad is fused into LOAD,
-           paper §4.1.1).  w: (KH, KW, IC, OC) int8.  b: (OC,) int32.
-    pool:  None | (kp, sp)   — fused maxpool tail.
-    eltwise: None | (side_array int8 (N,OH,OW,OC), s_conv, s_side, relu_out).
-    th/toc: tile rows (of the FINAL output) and oc tile; must divide oh/oc.
+
+def _chain_kernel(*refs, chain, geom):
+    n_conv = sum(1 for st in chain if st[0] == "conv")
+    n_side = sum(1 for st in chain if st[0] == "elt")
+    x_ref = refs[0]
+    wrefs = refs[1:1 + 2 * n_conv]
+    srefs = refs[1 + 2 * n_conv:1 + 2 * n_conv + n_side]
+    o_ref = refs[-1]
+    j = pl.program_id(1)
+
+    t = x_ref[0, pl.dslice(j * geom["f_in"], geom["in_rows"])]
+    t = t[:, :geom["in_cols"]].astype(jnp.int32)
+    wi = si = 0
+    for i, st in enumerate(chain):
+        out_r, out_c = geom["rows"][i], geom["cols"][i]
+        if st[0] == "conv":
+            t = _conv_apply(t, wrefs[2 * wi], wrefs[2 * wi + 1], st,
+                            out_r, out_c)
+            wi += 1
+        elif st[0] == "pool":
+            t = _pool_apply(t, st, out_r, out_c)
+        else:
+            side = srefs[si][0, pl.dslice(j * geom["fout"][i], out_r)]
+            side = side[:, :out_c].astype(jnp.int32)
+            t = _elt_apply(t, side, st)
+            si += 1
+        if i + 1 < len(chain):
+            true_h, true_w = (st[12], st[13]) if st[0] == "conv" else \
+                             (st[9], st[10]) if st[0] == "pool" else \
+                             (st[5], st[6])
+            t = _mask(t, j * geom["fout"][i], geom["q"][i], true_h, true_w,
+                      _fill_of(chain[i + 1]))
+    o_ref[0] = _sat8(t)
+
+
+def fused_chain_pallas(x_pad, weights, biases, sides, *, chain, th, toc,
+                       oh, ow, oc, interpret=True):
+    """Launch a lowered chain as one kernel.
+
+    x_pad:   (N, Hp, Wp, C) int8, pre-padded per ``chain_geometry`` with the
+             first stage's pad identity.
+    weights: one (KH, KW, IC, OC) int8 panel per conv stage, in chain order.
+    biases:  one (OC,) int32 per conv stage.
+    sides:   one pre-padded (N, sHp, sWp, OCs) int8 per elt stage.
+    chain:   static stage specs (see ``core.lower``).
     """
-    n, hp, wp, ic = x_pad.shape
-    kh, kw, _, oc = w.shape
-    sh, sw = stride
-    if pool is not None:
-        kp, sp = pool
-        oh_f, ow_f = oh, ow               # pool-output dims
-        ow_c = (ow - 1) * sp + kp         # conv cols needed
-        kern = functools.partial(_kernel_pool, kh=kh, kw=kw, sh=sh, sw=sw,
-                                 th=th, ow=ow_f, shift=shift, relu=relu,
-                                 kp=kp, sp=sp, ow_c=ow_c)
-    elif eltwise is not None:
-        _, s_conv, s_side, relu_out = eltwise
-        oh_f, ow_f = oh, ow
-        kern = functools.partial(_kernel_eltwise, kh=kh, kw=kw, sh=sh, sw=sw,
-                                 th=th, ow=ow_f, shift=shift, relu=relu,
-                                 s_conv=s_conv, s_side=s_side, relu_out=relu_out)
-    else:
-        oh_f, ow_f = oh, ow
-        kern = functools.partial(_kernel_plain, kh=kh, kw=kw, sh=sh, sw=sw,
-                                 th=th, ow=ow_f, shift=shift, relu=relu)
+    n, hp, wp, c = x_pad.shape
+    geom = chain_geometry(chain, th, oh, ow)
+    conv_idx = [i for i, st in enumerate(chain) if st[0] == "conv"]
+    last_conv = conv_idx[-1] if conv_idx else -1
 
-    grid = (n, oh_f // th, oc // toc)
-    in_specs = [
-        # full padded image per batch element (T_w = full width, paper Eq. 5)
-        pl.BlockSpec((1, hp, wp, ic), lambda i, j, k: (i, 0, 0, 0)),
-        pl.BlockSpec((kh, kw, ic, toc), lambda i, j, k: (0, 0, 0, k)),
-        pl.BlockSpec((toc,), lambda i, j, k: (k,)),
-    ]
-    args = [x_pad, w, b]
-    if eltwise is not None:
-        side = eltwise[0]
-        in_specs.append(pl.BlockSpec((1, th, ow_f, toc),
-                                     lambda i, j, k: (i, j, 0, k)))
-        args.append(side)
-    out_spec = pl.BlockSpec((1, th, ow_f, toc), lambda i, j, k: (i, j, 0, k))
+    grid = (n, oh // th, oc // toc)
+    in_specs = [pl.BlockSpec((1, hp, wp, c), lambda i, j, k: (i, 0, 0, 0))]
+    args = [x_pad]
+    for w, b, ci in zip(weights, biases, conv_idx):
+        kh, kw, ic, oc_i = w.shape
+        if ci == last_conv:
+            in_specs.append(pl.BlockSpec((kh, kw, ic, toc),
+                                         lambda i, j, k: (0, 0, 0, k)))
+            in_specs.append(pl.BlockSpec((toc,), lambda i, j, k: (k,)))
+        else:
+            in_specs.append(pl.BlockSpec((kh, kw, ic, oc_i),
+                                         lambda i, j, k: (0, 0, 0, 0)))
+            in_specs.append(pl.BlockSpec((oc_i,), lambda i, j, k: (0,)))
+        args.extend([w, b])
+    elt_idx = [i for i, st in enumerate(chain) if st[0] == "elt"]
+    for ei, s in zip(elt_idx, sides):
+        sn, shp, swp, sc = s.shape
+        if ei > last_conv:   # rides the TOC slice of the final conv
+            in_specs.append(pl.BlockSpec((1, shp, swp, toc),
+                                         lambda i, j, k: (i, 0, 0, k)))
+        else:
+            in_specs.append(pl.BlockSpec((1, shp, swp, sc),
+                                         lambda i, j, k: (i, 0, 0, 0)))
+        args.append(s)
+
+    kern = functools.partial(_chain_kernel, chain=chain, geom=geom)
     fn = pl.pallas_call(
         kern,
         grid=grid,
         in_specs=in_specs,
-        out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((n, oh_f, ow_f, oc), jnp.int8),
+        out_specs=pl.BlockSpec((1, th, ow, toc), lambda i, j, k: (i, j, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, oc), jnp.int8),
         interpret=interpret,
     )
     return fn(*args)
+
+
+# ------------------------------------------------------ horizontal (stacked)
+def _horizontal_kernel(x_ref, w_ref, b_ref, s_ref, r_ref, o_ref, *,
+                       kh, kw, sh, sw, th, ow):
+    j = pl.program_id(1)
+    in_rows = (th - 1) * sh + kh
+    in_cols = (ow - 1) * sw + kw
+    t = x_ref[0, pl.dslice(j * th * sh, in_rows)]
+    t = t[:, :in_cols].astype(jnp.int32)
+    ic = t.shape[-1]
+    toc = w_ref.shape[-1]
+    acc = jnp.zeros((th * ow, toc), jnp.int32)
+    for i in range(kh):
+        for jj in range(kw):
+            sl = jax.lax.slice(t, (i, jj, 0),
+                               (i + (th - 1) * sh + 1,
+                                jj + (ow - 1) * sw + 1, ic), (sh, sw, 1))
+            acc = acc + jnp.dot(sl.reshape(th * ow, ic),
+                                w_ref[i, jj].astype(jnp.int32),
+                                preferred_element_type=jnp.int32)
+    acc = acc + b_ref[...].astype(jnp.int32)[None, :]
+    y = _round_shift_vec(acc.reshape(th, ow, toc), s_ref[...])
+    y = jnp.where(r_ref[...].reshape(1, 1, toc) != 0, jnp.maximum(y, 0), y)
+    o_ref[0] = _sat8(y)
+
+
+def fused_horizontal_pallas(x_pad, w, b, shift_vec, relu_vec, *, stride,
+                            th, toc, oh, ow, interpret=True):
+    """Sibling convs batched over OC-stacked weights.
+
+    w: (KH, KW, IC, sum_OC) int8 stacked along OC; shift_vec/relu_vec: int32
+    per-channel requantization shift / ReLU mask.  x_pad pre-padded.
+    """
+    n, hp, wp, ic = x_pad.shape
+    kh, kw, _, oc = w.shape
+    sh, sw = stride
+    kern = functools.partial(_horizontal_kernel, kh=kh, kw=kw, sh=sh, sw=sw,
+                             th=th, ow=ow)
+    fn = pl.pallas_call(
+        kern,
+        grid=(n, oh // th, oc // toc),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, ic), lambda i, j, k: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, ic, toc), lambda i, j, k: (0, 0, 0, k)),
+            pl.BlockSpec((toc,), lambda i, j, k: (k,)),
+            pl.BlockSpec((toc,), lambda i, j, k: (k,)),
+            pl.BlockSpec((toc,), lambda i, j, k: (k,)),
+        ],
+        out_specs=pl.BlockSpec((1, th, ow, toc), lambda i, j, k: (i, j, 0, k)),
+        out_shape=jax.ShapeDtypeStruct((n, oh, ow, oc), jnp.int8),
+        interpret=interpret,
+    )
+    return fn(x_pad, w, b, shift_vec, relu_vec)

@@ -1,25 +1,24 @@
-"""jit'd wrapper + executor bridge for the fused conv kernel.
+"""Launcher + executor bridge for the fused chain kernel.
 
-``fused_conv_block``    — pads, picks tiles, launches the Pallas kernel.
-``supports``            — static pattern check (what the kernel accelerates);
-                          unsupported patterns fall back to the ref executor —
-                          this *is* the mixed-compilation boundary on TPU.
-``group_descriptor`` /
-``run_group``           — the Int8Executor hook: recognize a planned fused
-                          group ([conv], [conv,maxpool], [conv,eltwise]) and
-                          run it as one kernel launch.
+``run_launch``      — execute one ``lower.FusedLaunch`` against an activation
+                      env.  This is the ``Int8Executor`` dispatch hook: the
+                      launch already carries every resolved parameter, so NO
+                      graph inspection or pattern matching happens at run
+                      time — lowering decided everything at compile time.
+``fused_conv_block``— legacy single-conv(+tail) wrapper (kernel tests,
+                      micro-benchmarks).
+``supports``        — static support predicate of the chain kernel.
 """
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.xgraph import XGraph, _padding
-from repro.kernels.conv_fused.conv_fused import fused_conv_pallas
+from repro.kernels.conv_fused.conv_fused import (
+    I8_MIN, chain_geometry, fused_chain_pallas, fused_horizontal_pallas)
 
 
 def _tile_rows(oh: int, pref=(8, 4, 2, 1)) -> int:
@@ -36,136 +35,121 @@ def _tile_oc(oc: int) -> int:
     return oc
 
 
-def supports(*, kernel, stride, dilation=(1, 1), depthwise=False,
-             pool=None, conv_oh=None, conv_ow=None) -> bool:
-    if depthwise or dilation != (1, 1):
-        return False
-    if stride[0] != stride[1]:
-        return False
-    if pool is not None:
-        kp, sp = pool
-        # pool windows must tile the conv output exactly (no ceil extension)
-        if (conv_oh - kp) % sp != 0 or (conv_ow - kp) % sp != 0:
-            return False
-    return True
+def supports(*, depthwise=False, **_ignored) -> bool:
+    """What the chain kernel accepts.  Depthwise convolution is the only
+    structural exclusion; dilation, anisotropic strides/kernels and
+    ceil/padded pool tails are all handled by the staged kernel's
+    padded-coordinate masking (extra keyword capabilities are accepted for
+    historical call sites and ignored)."""
+    return not depthwise
 
 
-@partial(jax.jit, static_argnames=("stride", "pad", "shift", "relu", "pool",
-                                   "elt_shifts", "interpret"))
-def _launch(x, w, b, side, *, stride, pad, shift, relu, pool, elt_shifts,
-            interpret):
+def _pad_to(x, top: int, left: int, h_req: int, w_req: int, fill: int):
+    n, h, w, c = x.shape
+    bottom = max(0, h_req - top - h)
+    right = max(0, w_req - left - w)
+    return jnp.pad(x, ((0, 0), (top, bottom), (left, right), (0, 0)),
+                   constant_values=np.int8(fill))
+
+
+@partial(jax.jit, static_argnames=("chain", "oh", "ow", "oc", "interpret"))
+def _run_chain(x, weights, biases, sides, *, chain, oh, ow, oc, interpret):
+    th = _tile_rows(oh)
+    has_conv = any(st[0] == "conv" for st in chain)
+    toc = _tile_oc(oc) if has_conv else oc
+    geom = chain_geometry(chain, th, oh, ow)
+    xp = _pad_to(x, geom["q_in"][0], geom["q_in"][1],
+                 geom["h_req"], geom["w_req"], geom["fill0"])
+    sp = tuple(_pad_to(s, sg["q"][0], sg["q"][1], sg["h_req"], sg["w_req"], 0)
+               for s, sg in zip(sides, geom["sides"]))
+    return fused_chain_pallas(xp, weights, biases, sp, chain=chain, th=th,
+                              toc=toc, oh=oh, ow=ow, oc=oc,
+                              interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("stride", "pad", "oh", "ow", "interpret"))
+def _run_horizontal(x, w, b, shift_vec, relu_vec, *, stride, pad, oh, ow,
+                    interpret):
+    kh, kw = w.shape[:2]
+    sh, sw = stride
+    th = _tile_rows(oh)
+    toc = _tile_oc(w.shape[-1])
+    xp = _pad_to(x, pad[0], pad[1], (oh - 1) * sh + kh, (ow - 1) * sw + kw, 0)
+    return fused_horizontal_pallas(xp, w, b, shift_vec, relu_vec,
+                                   stride=stride, th=th, toc=toc, oh=oh,
+                                   ow=ow, interpret=interpret)
+
+
+# ------------------------------------------------------------ executor hook
+def run_launch(launch, env: dict, qm, interpret: bool = True) -> dict:
+    """Execute one FusedLaunch; returns {tensor name: int8 array}."""
+    if launch.kind == "horizontal":
+        x = env[launch.in_name]
+        w = jnp.concatenate(
+            [jnp.asarray(qm.weights[m]) for m, *_ in launch.members], axis=-1)
+        b = jnp.concatenate(
+            [jnp.asarray(qm.biases[m]) for m, *_ in launch.members])
+        shift_vec = jnp.asarray(np.concatenate(
+            [np.full(oc, s, np.int32) for _, oc, s, _ in launch.members]))
+        relu_vec = jnp.asarray(np.concatenate(
+            [np.full(oc, int(r), np.int32) for _, oc, _, r in launch.members]))
+        oh, ow = launch.out_hw
+        y = _run_horizontal(x, w, b, shift_vec, relu_vec,
+                            stride=tuple(launch.stride),
+                            pad=tuple(launch.pad), oh=oh, ow=ow,
+                            interpret=interpret)
+        outs, off = {}, 0
+        for m, oc_m, _, _ in launch.members:
+            outs[m] = y[..., off:off + oc_m]
+            off += oc_m
+        return outs
+
+    x = env[launch.in_name]
+    if launch.fc_reshape:
+        x = x.reshape(x.shape[0], 1, 1, -1)
+    weights, biases = [], []
+    for st in launch.stages:
+        if st[0] == "conv":
+            w = jnp.asarray(qm.weights[st[1]])
+            if launch.fc_reshape:
+                w = w.reshape(1, 1, *w.shape)
+            weights.append(w)
+            biases.append(jnp.asarray(qm.biases[st[1]]))
+    sides = tuple(env[s] for s in launch.sides)
+    oh, ow = launch.out_hw
+    oc = int(weights[-1].shape[-1]) if weights else int(x.shape[-1])
+    y = _run_chain(x, tuple(weights), tuple(biases), sides,
+                   chain=launch.stages, oh=oh, ow=ow, oc=oc,
+                   interpret=interpret)
+    return {launch.out_name: y}
+
+
+# ------------------------------------------------------------ legacy wrapper
+def fused_conv_block(x, w, b, *, stride=(1, 1), pad=(0, 0), shift=0,
+                     relu=False, pool=None, eltwise=None, interpret=True):
+    """Single conv (+maxpool | +eltwise) as a 1-2 stage chain.
+
+    eltwise = (side, s_conv, s_side, relu_out) or None; pool = (kp, sp) with
+    VALID floor semantics (the historical test contract)."""
     n, h, w_, ic = x.shape
     kh, kw, _, oc = w.shape
     sh, sw = stride
     ph, pw = pad
-    oh_c = (h + 2 * ph - kh) // sh + 1
-    ow_c = (w_ + 2 * pw - kw) // sw + 1
+    oh = (h + 2 * ph - kh) // sh + 1
+    ow = (w_ + 2 * pw - kw) // sw + 1
+    stages = [("conv", "w0", kh, kw, sh, sw, ph, pw, 1, 1,
+               int(shift), bool(relu), oh, ow)]
+    sides = ()
     if pool is not None:
         kp, sp = pool
-        oh = (oh_c - kp) // sp + 1
-        ow = (ow_c - kp) // sp + 1
-    else:
-        oh, ow = oh_c, ow_c
-    th = _tile_rows(oh)
-    toc = _tile_oc(oc)
-    # pad: conv padding + slack for the slice-reshape stride trick (zeros
-    # beyond the receptive field are sliced then dropped, never used)
-    slack_h = sh * (pool[1] if pool else 1) + kh
-    slack_w = sw * (pool[1] if pool else 1) + kw
-    xp = jnp.pad(x, ((0, 0), (ph, ph + slack_h), (pw, pw + slack_w), (0, 0)))
-    eltwise = None
-    if elt_shifts is not None:
-        s_conv, s_side, relu_out = elt_shifts
-        eltwise = (side, s_conv, s_side, relu_out)
-    return fused_conv_pallas(xp, w, b, stride=stride, shift=shift, relu=relu,
-                             th=th, toc=toc, oh=oh, ow=ow,
-                             pool=pool, eltwise=eltwise, interpret=interpret)
-
-
-def fused_conv_block(x, w, b, *, stride=(1, 1), pad=(0, 0), shift=0,
-                     relu=False, pool=None, eltwise=None, interpret=True):
-    """Public wrapper.  eltwise = (side, s_conv, s_side, relu_out) or None."""
-    side = eltwise[0] if eltwise is not None else jnp.zeros((1,), jnp.int8)
-    elt_shifts = tuple(eltwise[1:]) if eltwise is not None else None
-    return _launch(x, w, b, side, stride=tuple(stride), pad=tuple(pad),
-                   shift=int(shift), relu=bool(relu), pool=pool,
-                   elt_shifts=elt_shifts, interpret=interpret)
-
-
-# ------------------------------------------------------- executor bridge
-@dataclasses.dataclass
-class GroupDesc:
-    kind: str                 # "conv" | "conv_pool" | "conv_eltwise"
-    conv: str
-    tail: str | None
-    in_name: str
-    side_name: str | None
-    kwargs: dict
-
-
-def group_descriptor(g: XGraph, qm, group: list) -> GroupDesc | None:
-    """Recognize a planned group the kernel can run; None => ref fallback."""
-    ops = [g.nodes[nm].op for nm in group]
-    conv = group[0]
-    node = g.nodes[conv]
-    if node.op != "conv" or conv not in qm.weights:
-        return None
-    a = node.attrs
-    kh, kw = a["kernel"]
-    stride = tuple(a.get("stride", (1, 1)))
-    dil = tuple(a.get("dilation", (1, 1)))
-    ph, pw = _padding(a.get("pad", "same"), dil[0] * (kh - 1) + 1,
-                      dil[1] * (kw - 1) + 1)
-    shift = qm.shift_for(g, conv)
-    relu = bool(a.get("relu"))
-    base = dict(stride=stride, pad=(ph, pw), shift=shift, relu=relu)
-    oh_c, ow_c = g.shape(conv)[1], g.shape(conv)[2]
-
-    if ops == ["conv"]:
-        if not supports(kernel=(kh, kw), stride=stride, dilation=dil):
-            return None
-        return GroupDesc("conv", conv, None, node.inputs[0], None, base)
-
-    if len(group) == 2 and ops == ["conv", "maxpool"]:
-        tail = g.nodes[group[1]]
-        ta = tail.attrs
-        kp = ta["kernel"][0]
-        sp = ta.get("stride", ta["kernel"])[0]
-        if ta["kernel"][0] != ta["kernel"][1]:
-            return None
-        tph, tpw = _padding(ta.get("pad", "valid"), kp, kp)
-        if (tph, tpw) != (0, 0):
-            return None
-        if not supports(kernel=(kh, kw), stride=stride, dilation=dil,
-                        pool=(kp, sp), conv_oh=oh_c, conv_ow=ow_c):
-            return None
-        return GroupDesc("conv_pool", conv, group[1], node.inputs[0], None,
-                         dict(base, pool=(kp, sp)))
-
-    if len(group) == 2 and ops == ["conv", "eltwise_add"]:
-        tail = g.nodes[group[1]]
-        side = [i for i in tail.inputs if i != conv]
-        if len(side) != 1:
-            return None
-        if not supports(kernel=(kh, kw), stride=stride, dilation=dil):
-            return None
-        f_out = qm.f_a[group[1]]
-        s_conv = qm.f_a[conv] - f_out
-        s_side = qm.f_a[side[0]] - f_out
-        relu_out = bool(tail.attrs.get("relu"))
-        return GroupDesc("conv_eltwise", conv, group[1], node.inputs[0],
-                         side[0], dict(base, elt=(s_conv, s_side, relu_out)))
-    return None
-
-
-def run_group(desc: GroupDesc, env: dict, qm, interpret: bool = True) -> dict:
-    x = env[desc.in_name]
-    w = jnp.asarray(qm.weights[desc.conv])
-    b = jnp.asarray(qm.biases[desc.conv])
-    kw = dict(desc.kwargs)
-    eltwise = None
-    if desc.kind == "conv_eltwise":
-        s_conv, s_side, relu_out = kw.pop("elt")
-        eltwise = (env[desc.side_name], s_conv, s_side, relu_out)
-    y = fused_conv_block(x, w, b, eltwise=eltwise, interpret=interpret, **kw)
-    return {(desc.tail or desc.conv): y}
+        oh = (oh - kp) // sp + 1
+        ow = (ow - kp) // sp + 1
+        stages.append(("pool", "p0", "max", kp, kp, sp, sp, 0, 0, oh, ow,
+                       kp * kp))
+    if eltwise is not None:
+        side, s_conv, s_side, relu_out = eltwise
+        stages.append(("elt", "e0", int(s_conv), int(s_side),
+                       bool(relu_out), oh, ow))
+        sides = (side,)
+    return _run_chain(x, (w,), (b,), sides, chain=tuple(stages), oh=oh,
+                      ow=ow, oc=oc, interpret=interpret)

@@ -25,7 +25,8 @@ from repro import configs
 from repro.configs.base import SHAPES
 from repro.launch import shard
 from repro.launch.hlo_analysis import collective_stats
-from repro.launch.mesh import data_axes, make_production_mesh, mesh_dims
+from repro.launch.mesh import (data_axes, make_production_mesh, mesh_context,
+                               mesh_dims)
 from repro.launch.serve import make_prefill_step, make_serve_step
 from repro.launch.train import abstract_state, make_train_step, state_specs
 from repro.models import api
@@ -121,7 +122,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
            "status": "ok"}
     ga = grad_accum_for(cfg, shape)
     rec["grad_accum"] = ga
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         # ---- production compile: memory receipts + loop-aware collectives
         t0 = time.time()
         lowered = _compile_cell(cfg, shape, mesh, ga)

@@ -3,9 +3,13 @@ shape/stride/pool/eltwise sweep (interpret mode)."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-pytest.importorskip("hypothesis")  # dev-only dep (requirements-dev.txt)
-import hypothesis.strategies as st
-from hypothesis import given, settings
+
+try:  # dev-only dep (requirements-dev.txt); only the property sweep needs it
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 from repro.kernels.conv_fused.ops import fused_conv_block, supports
 from repro.kernels.conv_fused.ref import fused_conv_ref
@@ -78,25 +82,106 @@ def test_conv_eltwise_bit_exact(relu_out):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-@settings(max_examples=15, deadline=None)
-@given(st.integers(4, 12), st.integers(4, 12), st.sampled_from([1, 2, 3, 4]),
-       st.sampled_from([1, 2, 4, 8]), st.sampled_from([1, 3]),
-       st.integers(0, 10), st.booleans())
-def test_property_sweep(h, w, ic, oc, k, shift, relu):
-    rng = np.random.default_rng(h * 31 + w)
-    x, wt, b = _data(rng, h, w, ic, oc, k)
-    p = (k - 1) // 2
-    got = fused_conv_block(x, wt, b, stride=(1, 1), pad=(p, p), shift=shift,
-                           relu=relu)
-    want = fused_conv_ref(x, wt, b, stride=(1, 1), pad=(p, p), shift=shift,
-                          relu=relu)
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(4, 12), st.integers(4, 12),
+           st.sampled_from([1, 2, 3, 4]), st.sampled_from([1, 2, 4, 8]),
+           st.sampled_from([1, 3]), st.integers(0, 10), st.booleans())
+    def test_property_sweep(h, w, ic, oc, k, shift, relu):
+        rng = np.random.default_rng(h * 31 + w)
+        x, wt, b = _data(rng, h, w, ic, oc, k)
+        p = (k - 1) // 2
+        got = fused_conv_block(x, wt, b, stride=(1, 1), pad=(p, p),
+                               shift=shift, relu=relu)
+        want = fused_conv_ref(x, wt, b, stride=(1, 1), pad=(p, p),
+                              shift=shift, relu=relu)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_support_predicate():
+    # depthwise is the chain kernel's only structural exclusion
+    assert not supports(kernel=(3, 3), stride=(1, 1), depthwise=True)
+    # the staged kernel's padded-coordinate masking handles all of these
+    assert supports(kernel=(3, 3), stride=(1, 1), dilation=(2, 2))
+    assert supports(kernel=(3, 3), stride=(1, 2))
+    assert supports(kernel=(3, 3), stride=(1, 1), pool=(3, 2),
+                    conv_oh=8, conv_ow=8)   # ceil-extended pool windows
+
+
+def test_dilated_conv_bit_exact():
+    from repro.core import int8_ops
+    from repro.kernels.conv_fused.ops import _run_chain
+
+    rng = np.random.default_rng(11)
+    x, wt, b = _data(rng, 12, 12, 4, 8, 3)
+    want = int8_ops.conv2d(x, wt, b, stride=(1, 1), pad=(2, 2),
+                           dilation=(2, 2), shift=6, relu=True)
+    chain = (("conv", "c", 3, 3, 1, 1, 2, 2, 2, 2, 6, True, 12, 12),)
+    got = _run_chain(x, (wt,), (b,), (), chain=chain, oh=12, ow=12, oc=8,
+                     interpret=True)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
-def test_unsupported_patterns_fall_back():
-    assert not supports(kernel=(3, 3), stride=(1, 1), dilation=(2, 2))
-    assert not supports(kernel=(3, 3), stride=(1, 2))
-    assert not supports(kernel=(3, 3), stride=(1, 1), depthwise=True)
-    # pool windows not tiling the conv output exactly
-    assert not supports(kernel=(3, 3), stride=(1, 1), pool=(3, 2),
-                        conv_oh=8, conv_ow=8)
+def test_ceil_pool_chain_bit_exact():
+    """conv -> maxpool with pool padding AND a ceil-extended last window —
+    the pre-padded-slack path the lowering pass emits for ResNet's pool1."""
+    import math
+
+    from repro.core import int8_ops
+    from repro.kernels.conv_fused.ops import _run_chain
+
+    rng = np.random.default_rng(12)
+    x, wt, b = _data(rng, 13, 13, 4, 8, 3)
+    y_c = fused_conv_ref(x, wt, b, stride=(1, 1), pad=(1, 1), shift=6,
+                         relu=True)
+    for kp, sp, pp in [(3, 2, 0), (3, 2, 1), (2, 2, 1)]:
+        want = int8_ops.maxpool(y_c, kernel=(kp, kp), stride=(sp, sp),
+                                pad=(pp, pp), ceil_mode=True)
+        oh = math.ceil((13 + 2 * pp - kp) / sp) + 1
+        chain = (("conv", "c", 3, 3, 1, 1, 1, 1, 1, 1, 6, True, 13, 13),
+                 ("pool", "p", "max", kp, kp, sp, sp, pp, pp, oh, oh, kp * kp))
+        got = _run_chain(x, (wt,), (b,), (), chain=chain, oh=oh, ow=oh,
+                         oc=8, interpret=True)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_avgpool_chain_bit_exact():
+    from repro.core import int8_ops
+    from repro.kernels.conv_fused.ops import _run_chain
+
+    rng = np.random.default_rng(13)
+    x, wt, b = _data(rng, 12, 12, 4, 8, 3)
+    y_c = fused_conv_ref(x, wt, b, stride=(1, 1), pad=(1, 1), shift=6,
+                         relu=True)
+    want = int8_ops.avgpool(y_c, kernel=(2, 2), stride=(2, 2))
+    chain = (("conv", "c", 3, 3, 1, 1, 1, 1, 1, 1, 6, True, 12, 12),
+             ("pool", "p", "avg", 2, 2, 2, 2, 0, 0, 6, 6, 4))
+    got = _run_chain(x, (wt,), (b,), (), chain=chain, oh=6, ow=6, oc=8,
+                     interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_horizontal_stacked_bit_exact():
+    """Two siblings with different shifts/ReLU in one stacked launch must
+    match each sibling computed alone (per-channel requantization)."""
+    import jax.numpy as jnp
+
+    from repro.core import int8_ops
+    from repro.kernels.conv_fused.ops import _run_horizontal
+
+    rng = np.random.default_rng(14)
+    x = jnp.asarray(rng.integers(-128, 128, (1, 10, 10, 4)).astype(np.int8))
+    wa = jnp.asarray(rng.integers(-128, 128, (3, 3, 4, 8)).astype(np.int8))
+    wb = jnp.asarray(rng.integers(-128, 128, (3, 3, 4, 12)).astype(np.int8))
+    ba = jnp.asarray(rng.integers(-2000, 2000, 8).astype(np.int32))
+    bb = jnp.asarray(rng.integers(-2000, 2000, 12).astype(np.int32))
+    ya = int8_ops.conv2d(x, wa, ba, stride=(1, 1), pad=(1, 1), shift=5,
+                         relu=True)
+    yb = int8_ops.conv2d(x, wb, bb, stride=(1, 1), pad=(1, 1), shift=7)
+    y = _run_horizontal(
+        x, jnp.concatenate([wa, wb], axis=-1), jnp.concatenate([ba, bb]),
+        jnp.asarray(np.repeat([5, 7], [8, 12]).astype(np.int32)),
+        jnp.asarray(np.repeat([1, 0], [8, 12]).astype(np.int32)),
+        stride=(1, 1), pad=(1, 1), oh=10, ow=10, interpret=True)
+    np.testing.assert_array_equal(np.asarray(y[..., :8]), np.asarray(ya))
+    np.testing.assert_array_equal(np.asarray(y[..., 8:]), np.asarray(yb))
