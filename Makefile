@@ -1,7 +1,7 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test ci test-multidevice dev-deps bench-table3
+.PHONY: verify test ci test-multidevice dev-deps bench-table3 serve-smoke
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -20,7 +20,7 @@ test:
 # test_multidevice forces 8 host devices in subprocesses, which needs real
 # cores; on throttled 2-core CI boxes it can exceed any sane wall budget, so
 # it gates separately (make test-multidevice).
-ci: dev-deps
+ci: dev-deps serve-smoke
 	$(PY) -m pytest -q --ignore=tests/test_multidevice.py
 
 test-multidevice:
@@ -28,3 +28,11 @@ test-multidevice:
 
 bench-table3:
 	$(PY) benchmarks/table3.py
+
+# Serving acceptance (ISSUE 3): tiny-resolution serve_bench run asserting
+# batched > sequential throughput, bit-exact served outputs, and a
+# hazard-free cross-request pipeline schedule.  Writes serve_bench.json
+# (uploaded as a CI build artifact).
+serve-smoke:
+	$(PY) benchmarks/serve_bench.py --model vgg16 --img 32 --requests 16 \
+	    --smoke --json serve_bench.json

@@ -6,7 +6,7 @@ the simulator's hazard oracle, lowers the backend ``GroupProgram``
 (``core.lower``: fused-launch descriptors + reasoned fallbacks), and packages
 everything a runtime needs — instructions, program, execution groups,
 quantization metadata, memory-plan summary — into a single serializable
-:class:`CompiledArtifact` ("DNNVM object file", an npz, format v2).
+:class:`CompiledArtifact` ("DNNVM object file", an npz, format v3).
 ``PLAN_CACHE`` memoizes compilation by (graph, device, strategy, quant) so
 repeated serving requests reload plans instead of recompiling.
 """
@@ -15,13 +15,16 @@ from repro.asm.artifact import (
     PlanCache,
     PLAN_CACHE,
     compile_strategy,
+    device_of_artifact,
     graph_signature,
     load_artifact,
+    quant_signature,
     save_artifact,
     strategy_signature,
 )
 
 __all__ = [
     "CompiledArtifact", "PlanCache", "PLAN_CACHE", "compile_strategy",
-    "graph_signature", "load_artifact", "save_artifact", "strategy_signature",
+    "device_of_artifact", "graph_signature", "load_artifact",
+    "quant_signature", "save_artifact", "strategy_signature",
 ]

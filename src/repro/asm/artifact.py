@@ -36,7 +36,10 @@ from repro.memory import MemoryPlanError, plan_memory
 # v2: adds the lowered GroupProgram section (launch descriptors + reasoned
 # fallbacks) — v1 artifacts predate compile-time lowering and cannot be
 # dispatched without re-pattern-matching, so loading them is refused.
-FORMAT_VERSION = 2
+# v3: "avgpool_ceil" left the fallback vocabulary (ceil-extended avgpool now
+# lowers to a fused launch) — a v2 program may carry that reason, which
+# RefFallback would reject on deserialization, so v2 loads are refused too.
+FORMAT_VERSION = 3
 _OPCODES = ("LOAD", "SAVE", "CONV", "POOL", "MISC", "END")
 # attrs whose JSON lists must come back as tuples (XGraph convention)
 _TUPLE_ATTRS = {"shape", "kernel", "stride", "dilation", "pad"}
@@ -161,6 +164,12 @@ class CompiledArtifact:
         return Int8Executor(g if g is not None else self.rebuild_graph(),
                             self.quantized_model(), strategy=self,
                             backend=backend)
+
+    def session(self, backend: str = "ref", **kw):
+        """Open a runtime-supporter :class:`~repro.runtime.session.Session`
+        on this artifact (seeds the plan cache; no recompilation)."""
+        from repro.runtime import Session
+        return Session.from_artifact(self, backend=backend, **kw)
 
 
 # ----------------------------------------------------------------- compilation
@@ -320,11 +329,21 @@ class PlanCache:
             self.hits += 1
             return art, True
         art = compile_strategy(g, strategy, dev, qm=qm)
-        self._store[k] = art
         self.misses += 1
+        self._put(k, art)
+        return art, False
+
+    def put(self, g: XGraph, strategy, dev: DeviceModel, art: CompiledArtifact,
+            qm: QuantizedModel | None = None) -> None:
+        """Seed a precompiled artifact (e.g. loaded from an object file) so
+        later ``get_or_compile`` calls hit instead of recompiling."""
+        self._put(self.key(g, strategy, dev, qm), art)
+
+    def _put(self, k: tuple, art: CompiledArtifact) -> None:
+        self._store.pop(k, None)
+        self._store[k] = art
         while len(self._store) > self.maxsize:
             self._store.pop(next(iter(self._store)))
-        return art, False
 
     def clear(self) -> None:
         self._store.clear()

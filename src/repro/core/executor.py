@@ -19,9 +19,6 @@ program as ``RefFallback("host_op")`` entries.
 """
 from __future__ import annotations
 
-import math
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -71,9 +68,13 @@ def _float_node(g: XGraph, node, env, params):
         kh, kw = a["kernel"]
         sh, sw = a.get("stride", a["kernel"])
         ph, pw = _padding(a.get("pad", "valid"), kh, kw)
+        oh, ow = g.shape(node.name)[1:3]
+        h, w_ = xs[0].shape[1:3]
+        eh = max(0, (oh - 1) * sh + kh - h - 2 * ph)
+        ew = max(0, (ow - 1) * sw + kw - w_ - 2 * pw)
         y = jax.lax.reduce_window(
             xs[0], 0.0, jax.lax.add, (1, kh, kw, 1), (1, sh, sw, 1),
-            ((0, 0), (ph, ph), (pw, pw), (0, 0))) / (kh * kw)
+            ((0, 0), (ph, ph + eh), (pw, pw + ew), (0, 0))) / (kh * kw)
     elif op == "global_avgpool":
         y = jnp.mean(xs[0], axis=(1, 2), keepdims=True)
     elif op == "eltwise_add":
@@ -165,7 +166,8 @@ def _int8_node(g: XGraph, node, env, qm: QuantizedModel):
         kh, kw = a["kernel"]
         ph, pw = _padding(a.get("pad", "valid"), kh, kw)
         return int8_ops.avgpool(xs[0], kernel=a["kernel"],
-                                stride=a.get("stride", a["kernel"]), pad=(ph, pw))
+                                stride=a.get("stride", a["kernel"]), pad=(ph, pw),
+                                ceil_mode=a.get("ceil_mode", True))
     if op == "global_avgpool":
         return int8_ops.global_avgpool(xs[0])
     if op == "eltwise_add":
@@ -223,6 +225,32 @@ class Int8Executor:
             self.groups = [[n] for n in g.compute_nodes()]
         self.interpret = interpret
         self._fn = None
+        self._in_shape = next((g.shape(n.name) for n in g if n.op == "input"),
+                              None)
+
+    def _validate_input(self, x) -> None:
+        """Fail fast with a clear message instead of a deep Pallas/XLA shape
+        error.  The graph's batch dimension is a planning default, not a
+        constraint: any N >= 1 is accepted (dynamic batching stacks requests),
+        while dtype, rank and the per-image extents must match the graph."""
+        shape = getattr(x, "shape", None)
+        dtype = getattr(x, "dtype", None)
+        if dtype is None or jnp.dtype(dtype) != jnp.int8:
+            raise ValueError(
+                f"Int8Executor input must be int8 (quantize first, e.g. "
+                f"quantize.quantize_to(x, qm.f_a[input])); got dtype {dtype}")
+        if self._in_shape is None:
+            return
+        if shape is None or len(shape) != 4:
+            raise ValueError(
+                f"Int8Executor input must be rank-4 NHWC; got shape {shape}")
+        if tuple(shape[1:]) != tuple(self._in_shape[1:]):
+            raise ValueError(
+                f"Int8Executor input spatial/channel extents {tuple(shape[1:])} "
+                f"do not match the compiled graph's {tuple(self._in_shape[1:])} "
+                f"(any batch size is accepted; H/W/C are fixed at compile time)")
+        if shape[0] < 1:
+            raise ValueError("Int8Executor input batch must be >= 1")
 
     def _build(self):
         g, qm = self.g, self.qm
@@ -260,6 +288,7 @@ class Int8Executor:
         return jax.jit(fn)
 
     def __call__(self, x: np.ndarray) -> dict:
+        self._validate_input(x)
         if self._fn is None:
             self._fn = self._build()
         out = self._fn(jnp.asarray(x))

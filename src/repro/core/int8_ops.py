@@ -11,10 +11,25 @@ defined here.  Everything is pure jnp and jit-safe.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 
 I8_MIN, I8_MAX = -128, 127
+
+
+def ceil_extension(h: int, w: int, kernel, stride, pad) -> tuple[int, int]:
+    """Caffe ceil-mode pooling: extra bottom/right padding (eh, ew) so every
+    output window is covered.  Shared by maxpool and avgpool — the formula
+    must match ``xgraph`` shape inference or masking goes stale."""
+    kh, kw = kernel
+    sh, sw = stride
+    ph, pw = pad
+    oh = math.ceil((h + 2 * ph - kh) / sh) + 1
+    ow = math.ceil((w + 2 * pw - kw) / sw) + 1
+    return (max(0, (oh - 1) * sh + kh - h - 2 * ph),
+            max(0, (ow - 1) * sw + kw - w - 2 * pw))
 
 
 def round_shift(x: jnp.ndarray, s) -> jnp.ndarray:
@@ -88,27 +103,27 @@ def maxpool(x: jnp.ndarray, *, kernel, stride, pad=(0, 0),
     sh, sw = stride
     n, h, w, c = x.shape
     ph, pw = pad
-    if ceil_mode:  # Caffe: pad right/bottom so every window is covered
-        import math
-        oh = math.ceil((h + 2 * ph - kh) / sh) + 1
-        ow = math.ceil((w + 2 * pw - kw) / sw) + 1
-        eh = (oh - 1) * sh + kh - h - 2 * ph
-        ew = (ow - 1) * sw + kw - w - 2 * pw
-    else:
-        eh = ew = 0
+    eh, ew = (ceil_extension(h, w, kernel, stride, pad) if ceil_mode
+              else (0, 0))
     return jax.lax.reduce_window(
         x, jnp.int8(I8_MIN), jax.lax.max,
         window_dimensions=(1, kh, kw, 1), window_strides=(1, sh, sw, 1),
-        padding=((0, 0), (ph, ph + max(0, eh)), (pw, pw + max(0, ew)), (0, 0)))
+        padding=((0, 0), (ph, ph + eh), (pw, pw + ew), (0, 0)))
 
 
-def avgpool(x: jnp.ndarray, *, kernel, stride, pad=(0, 0)) -> jnp.ndarray:
+def avgpool(x: jnp.ndarray, *, kernel, stride, pad=(0, 0),
+            ceil_mode: bool = True) -> jnp.ndarray:
     kh, kw = kernel
     sh, sw = stride
+    n, h, w, c = x.shape
+    ph, pw = pad
+    # ceil extension reads zeros; the divisor stays kh*kw (count_include_pad)
+    eh, ew = (ceil_extension(h, w, kernel, stride, pad) if ceil_mode
+              else (0, 0))
     s = jax.lax.reduce_window(
         x.astype(jnp.int32), jnp.int32(0), jax.lax.add,
         window_dimensions=(1, kh, kw, 1), window_strides=(1, sh, sw, 1),
-        padding=((0, 0), (pad[0], pad[0]), (pad[1], pad[1]), (0, 0)))
+        padding=((0, 0), (ph, ph + eh), (pw, pw + ew), (0, 0)))
     cnt = kh * kw
     return sat8(jnp.sign(s) * ((jnp.abs(s) + cnt // 2) // cnt))
 

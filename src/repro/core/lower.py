@@ -45,7 +45,6 @@ FALLBACK_REASONS = frozenset({
     "folded_concat",   # layout no-op: producers SAVE with strides (zero cost)
     "unsupported_op",  # op with no fused-kernel support (softmax, reorg, ...)
     "unquantized",     # conv/fc weights missing from the QuantizedModel
-    "avgpool_ceil",    # ceil-extended avgpool: ref semantics are floor-only
     "gap_mid_chain",   # global pooling feeding further fused ops
 })
 
@@ -132,11 +131,8 @@ def _pool_stage(g: XGraph, name: str):
     sh, sw = a.get("stride", a["kernel"])
     ph, pw = _padding(a.get("pad", "valid"), kh, kw)
     if node.op == "avgpool":
-        # int8_ops.avgpool has floor semantics: a ceil-extended window would
-        # change the divisor story — refuse rather than silently diverge.
-        _, ih, iw, _ = g.shape(node.inputs[0])
-        if (oh - 1) * sh + kh > ih + 2 * ph or (ow - 1) * sw + kw > iw + 2 * pw:
-            return "avgpool_ceil"
+        # Ceil-extended windows read zeros (the avg pad identity) and keep the
+        # kh*kw divisor — count_include_pad semantics, same as int8_ops.avgpool.
         return ("pool", name, "avg", kh, kw, sh, sw, ph, pw, oh, ow, kh * kw)
     return ("pool", name, "max", kh, kw, sh, sw, ph, pw, oh, ow, kh * kw)
 

@@ -73,6 +73,17 @@ def run(instrs: list[Instr]) -> SimReport:
     return run_times(instrs)[0]
 
 
+def engine_windows(instrs: list[Instr], times: dict) -> dict:
+    """Per-engine occupancy timeline: engine -> [(start, end, opcode, tag)],
+    in schedule order.  This is the Fig. 8/9 view — the runtime supporter
+    renders it per request to show LOAD(i+1) overlapping CONV(i)."""
+    out: dict[str, list] = {e: [] for e in ENGINES}
+    for ins in instrs:
+        s, e = times[ins.iid]
+        out[ins.engine].append((s, e, ins.opcode, ins.tag))
+    return out
+
+
 def check(instrs: list[Instr]) -> SimReport:
     """Simulate and audit the memory plan; raises MemoryHazardError."""
     rep, times = run_times(instrs)
@@ -166,10 +177,10 @@ def _ddr_hazards(instrs: list[Instr], times: dict) -> list[str]:
     return out
 
 
-def _bank_hazards(instrs: list[Instr], times: dict) -> list[str]:
-    # Per (group, tile): the in-bank is occupied from its LOAD's start until
-    # its last compute retires (SAVE if the tile has no compute); the out-bank
-    # from its first compute's start until its SAVE retires.
+def tile_accesses(instrs: list[Instr]) -> dict:
+    """Bucket an addressed stream per (group_id, tile) into its LOAD / SAVE /
+    compute instructions — the unit both the bank-hazard audit and the
+    runtime's cross-request schedule reason about."""
     tiles: dict[tuple, dict] = {}
     for ins in instrs:
         if ins.group_id < 0 or ins.tile < 0:
@@ -182,6 +193,22 @@ def _bank_hazards(instrs: list[Instr], times: dict) -> list[str]:
             t["save"].append(ins)
         elif ins.engine in COMPUTE_ENGINES:
             t["compute"].append(ins)
+    return tiles
+
+
+def bank_hazards(instrs: list[Instr], times: dict) -> list[str]:
+    """Ping/pong BRAM bank audit alone (the bank half of
+    :func:`memory_hazards`).  Public so the runtime can re-run it over a
+    *relabelled* pipelined stream — bank windows key on (group, bank), which
+    a per-request group renumbering would otherwise hide."""
+    return _bank_hazards(instrs, times)
+
+
+def _bank_hazards(instrs: list[Instr], times: dict) -> list[str]:
+    # Per (group, tile): the in-bank is occupied from its LOAD's start until
+    # its last compute retires (SAVE if the tile has no compute); the out-bank
+    # from its first compute's start until its SAVE retires.
+    tiles = tile_accesses(instrs)
 
     in_windows: dict[tuple, list] = {}    # (gid, bank) -> [(s, e, tile)]
     out_windows: dict[tuple, list] = {}

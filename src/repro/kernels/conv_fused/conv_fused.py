@@ -25,7 +25,7 @@ identity), and after each stage the kernel masks rows/cols falling outside
 the stage's true extent to the *consumer's* pad identity (0 for conv/eltwise/
 avg-sum, -128 for maxpool).  That reproduces exactly the reference semantics
 of zero-padded conv, -128-padded (and ceil-extended) maxpool, and zero-padded
-avgpool from ``int8_ops``.
+(and ceil-extended, count-include-pad) avgpool from ``int8_ops``.
 
 Channel tiling: the grid's third axis tiles the FINAL conv's output channels
 (TOC); stages upstream of it compute full channels (a conv consumer needs

@@ -1,0 +1,25 @@
+"""Runtime supporter (paper §1, §3.2): serve compiled artifacts end to end.
+
+DNNVM is "an integration of optimizers ..., an assembler, a runtime supporter
+and a validation environment"; this package is the runtime supporter — the
+host-side layer that feeds the accelerator:
+
+* :class:`Session`         — owns one compiled model (artifact via PlanCache,
+                             executor, memory plan); ``run`` / ``run_batch``.
+* :class:`DynamicBatcher`  — async request queue with max-batch / max-latency
+                             knobs; one worker flushes queued images as one
+                             batched launch.
+* :class:`Server`          — Session + batcher + latency/batch metrics.
+* :func:`pipeline_report`  — engine-level cross-request schedule: the
+                             artifact's addressed instruction stream,
+                             software-pipelined across requests on the time
+                             wheel and audited by the memory-hazard oracle.
+"""
+from repro.runtime.batching import BatcherClosed, DynamicBatcher
+from repro.runtime.schedule import (PipelineReport, pipeline_report,
+                                    pipeline_stream)
+from repro.runtime.server import Server
+from repro.runtime.session import Session
+
+__all__ = ["BatcherClosed", "DynamicBatcher", "PipelineReport", "Server",
+           "Session", "pipeline_report", "pipeline_stream"]

@@ -1,0 +1,125 @@
+"""Async dynamic-batching front end for the runtime supporter.
+
+Requests arrive one image at a time; the accelerator is happiest launching
+once per *batch* (one Pallas grid covers all N images).  The
+:class:`DynamicBatcher` sits between the two: ``submit`` enqueues a request
+and returns a future immediately, a single worker drains the queue into
+batches bounded by two knobs —
+
+* ``max_batch``     — never launch more than this many images at once;
+* ``max_latency_s`` — never hold the *oldest* queued request longer than
+  this before flushing a partial batch.
+
+The worker owns all executor calls (JAX dispatch stays single-threaded);
+completion is delivered through ``concurrent.futures.Future``, so callers can
+block, poll, or chain callbacks.  ``close()`` drains outstanding requests and
+joins the worker; submitting after close raises :class:`BatcherClosed`.
+"""
+from __future__ import annotations
+
+import collections
+import threading
+import time
+from concurrent.futures import Future
+
+
+class BatcherClosed(RuntimeError):
+    """submit() after close()."""
+
+
+class DynamicBatcher:
+    def __init__(self, run_batch, *, max_batch: int = 8,
+                 max_latency_s: float = 2e-3, clock=time.monotonic,
+                 latency_window: int = 16384):
+        """``run_batch(xs) -> list[result]`` executes one batch (one result
+        per request, same order).  ``latency_window`` bounds the retained
+        latency samples (a long-running server must not grow without bound)."""
+        if max_batch < 1:
+            raise ValueError("max_batch must be >= 1")
+        self._run_batch = run_batch
+        self.max_batch = max_batch
+        self.max_latency_s = max_latency_s
+        self._clock = clock
+        self._lock = threading.Lock()
+        self._cv = threading.Condition(self._lock)
+        self._queue: collections.deque = collections.deque()
+        self._closed = False
+        self.batch_sizes: collections.Counter = collections.Counter()
+        self.n_served = 0
+        # submit -> result per request, most recent latency_window samples;
+        # recorded BEFORE the future resolves, so a caller reading stats
+        # right after result() returns never sees a partial sample set
+        self.latencies: collections.deque = collections.deque(
+            maxlen=latency_window)
+        self._worker = threading.Thread(target=self._loop, daemon=True,
+                                        name="dnnvm-batcher")
+        self._worker.start()
+
+    # --------------------------------------------------------------- client
+    def submit(self, x) -> Future:
+        fut: Future = Future()
+        with self._cv:
+            if self._closed:
+                raise BatcherClosed("batcher is closed")
+            self._queue.append((x, fut, self._clock()))
+            self._cv.notify_all()
+        return fut
+
+    def close(self, wait: bool = True) -> None:
+        """Flush whatever is queued, then stop the worker.  Idempotent; with
+        an empty queue this returns as soon as the worker observes the flag."""
+        with self._cv:
+            self._closed = True
+            self._cv.notify_all()
+        if wait:
+            self._worker.join()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    @property
+    def pending(self) -> int:
+        with self._lock:
+            return len(self._queue)
+
+    # --------------------------------------------------------------- worker
+    def _loop(self) -> None:
+        while True:
+            with self._cv:
+                while not self._queue and not self._closed:
+                    self._cv.wait()
+                if not self._queue:      # closed and drained
+                    return
+                # batch-forming window: flush when full, when the OLDEST
+                # request has waited max_latency_s since submit (it may
+                # already have waited out a previous batch's execution), or
+                # at shutdown
+                deadline = self._queue[0][2] + self.max_latency_s
+                while (len(self._queue) < self.max_batch
+                       and not self._closed):
+                    remaining = deadline - self._clock()
+                    if remaining <= 0:
+                        break
+                    self._cv.wait(timeout=remaining)
+                batch = [self._queue.popleft()
+                         for _ in range(min(self.max_batch,
+                                            len(self._queue)))]
+            self._execute(batch)
+
+    def _execute(self, batch) -> None:
+        xs = [x for x, _, _ in batch]
+        try:
+            results = self._run_batch(xs)
+        except Exception as e:  # surface the failure on every waiting future
+            for _, fut, _ in batch:
+                fut.set_exception(e)
+            return
+        self.batch_sizes[len(batch)] += 1
+        self.n_served += len(batch)
+        now = self._clock()
+        self.latencies.extend(now - t0 for _, _, t0 in batch)
+        for (_, fut, _), res in zip(batch, results):
+            fut.set_result(res)

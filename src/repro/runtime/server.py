@@ -1,0 +1,88 @@
+"""Serving front end: Session + DynamicBatcher + metrics.
+
+``Server.submit`` is the whole client API — hand in one int8 image, get a
+future for its output dict.  Internally queued requests are flushed as
+batches (see :mod:`repro.runtime.batching`), each batch padded up to the
+nearest *allowed* size so the jitted executor only ever traces a handful of
+batch shapes, and every completion is timestamped for the latency
+percentiles the serving benchmark reports.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _default_sizes(max_batch: int) -> list[int]:
+    sizes, s = [], 1
+    while s < max_batch:
+        sizes.append(s)
+        s *= 2
+    sizes.append(max_batch)
+    return sorted(set(sizes))
+
+
+class Server:
+    def __init__(self, session, *, max_batch: int = 8,
+                 max_latency_s: float = 2e-3, allowed_sizes=None,
+                 warmup: bool = True):
+        from repro.runtime.batching import DynamicBatcher
+
+        self.session = session
+        self.allowed_sizes = (sorted(set(allowed_sizes)) if allowed_sizes
+                              else _default_sizes(max_batch))
+        if self.allowed_sizes[-1] < max_batch:
+            self.allowed_sizes.append(max_batch)
+        if warmup:
+            self._warmup()
+        self._batcher = DynamicBatcher(self._run, max_batch=max_batch,
+                                       max_latency_s=max_latency_s)
+
+    def _warmup(self) -> None:
+        """Trace every allowed batch shape once so steady-state serving never
+        pays jit compilation inside a latency-sensitive flush.  Goes straight
+        to the executor: warmup must not count as served traffic in the
+        session's stats."""
+        shape = self.session.graph.shape(
+            next(n.name for n in self.session.graph if n.op == "input"))
+        for s in self.allowed_sizes:
+            self.session.executor(np.zeros((s,) + tuple(shape[1:]), np.int8))
+
+    def _pad_size(self, n: int) -> int:
+        for s in self.allowed_sizes:
+            if s >= n:
+                return s
+        return n
+
+    def _run(self, xs):
+        return self.session.run_batch(xs, pad_to=self._pad_size(len(xs)))
+
+    # ---------------------------------------------------------------- client
+    def submit(self, x):
+        return self._batcher.submit(x)   # the batcher timestamps + records
+
+    def close(self, wait: bool = True) -> None:
+        self._batcher.close(wait=wait)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # --------------------------------------------------------------- metrics
+    def stats(self) -> dict:
+        lats = sorted(self._batcher.latencies)
+        pct = (lambda q: lats[min(len(lats) - 1,
+                                  int(q * (len(lats) - 1)))] * 1e3) \
+            if lats else (lambda q: 0.0)
+        hist = dict(sorted(self._batcher.batch_sizes.items()))
+        n = self._batcher.n_served
+        return {
+            "n_served": n,
+            "n_batches": sum(hist.values()),
+            "batch_histogram": hist,
+            "mean_batch": (n / sum(hist.values())) if hist else 0.0,
+            "p50_ms": pct(0.50),
+            "p99_ms": pct(0.99),
+            "allowed_sizes": list(self.allowed_sizes),
+        }

@@ -1,0 +1,107 @@
+"""The runtime supporter's unit of ownership: one compiled model, served.
+
+A :class:`Session` binds together everything needed to run inference against
+one (graph, strategy, device, quantization) tuple:
+
+* the :class:`~repro.asm.artifact.CompiledArtifact`, obtained through a
+  :class:`~repro.asm.artifact.PlanCache` — the serving path compiles once and
+  every later construction is a dictionary hit;
+* the :class:`~repro.core.executor.Int8Executor` over the artifact's lowered
+  ``GroupProgram`` (ref oracle or Pallas fused launches);
+* the memory plan + addressed instruction stream, from which
+  :meth:`pipeline_report` derives the engine-level cross-request schedule.
+
+``run`` serves one request; ``run_batch`` stacks N queued requests into one
+batched launch (one Pallas grid covers all N images — the executor's batch
+dimension is free); ``serve`` wraps the session in the dynamic-batching
+:class:`~repro.runtime.server.Server`.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class Session:
+    """Owns the executor + memory plan for one compiled model."""
+
+    def __init__(self, g, strategy, dev, qm, *, backend: str = "ref",
+                 cache=None, interpret: bool = True):
+        from repro import asm
+        from repro.core.executor import Int8Executor
+
+        self.cache = cache if cache is not None else asm.PLAN_CACHE
+        self.artifact, self.cache_hit = self.cache.get_or_compile(
+            g, strategy, dev, qm=qm)
+        self.graph, self.qm, self.device = g, qm, dev
+        self.backend = backend
+        self.executor = Int8Executor(g, qm, strategy=self.artifact,
+                                     backend=backend, interpret=interpret)
+        self.outputs = [n.name for n in g if not g.consumers(n.name)]
+        self.n_runs = 0
+        self.images_served = 0
+
+    @classmethod
+    def from_artifact(cls, art, *, backend: str = "ref", cache=None,
+                      interpret: bool = True) -> "Session":
+        """Open a session on a loaded DNNVM object file — no recompilation:
+        the artifact is seeded into the plan cache under its own key."""
+        from repro import asm
+        from repro.hw import get_device
+
+        g = art.rebuild_graph()
+        qm = art.quantized_model()
+        dev = get_device(art.device)
+        cache = cache if cache is not None else asm.PLAN_CACHE
+        cache.put(g, art, dev, art, qm=qm)
+        return cls(g, art, dev, qm, backend=backend, cache=cache,
+                   interpret=interpret)
+
+    # ------------------------------------------------------------- execution
+    def _stack(self, xs, pad_to: int | None = None):
+        rows = [np.asarray(x) for x in xs]
+        rows = [r[None] if r.ndim == 3 else r for r in rows]
+        x = np.concatenate(rows, axis=0)
+        n = x.shape[0]
+        if pad_to is not None and pad_to > n:
+            # pad with zero images up to an allowed batch size: bounds the
+            # number of distinct batch shapes the jitted executor ever traces
+            x = np.concatenate(
+                [x, np.zeros((pad_to - n,) + x.shape[1:], x.dtype)], axis=0)
+        return x, n
+
+    def run(self, x) -> dict:
+        """One request; accepts (H, W, C) or (1, H, W, C) int8."""
+        x = np.asarray(x)
+        out = self.executor(x[None] if x.ndim == 3 else x)
+        self.n_runs += 1
+        self.images_served += 1
+        return out
+
+    def run_batch(self, xs, pad_to: int | None = None) -> list[dict]:
+        """Serve N queued requests as ONE batched launch; returns one output
+        dict per request (leading batch dim 1, so results are directly
+        comparable with per-request execution)."""
+        x, n = self._stack(xs, pad_to=pad_to)
+        out = self.executor(x)
+        self.n_runs += 1
+        self.images_served += n
+        return [{k: v[i:i + 1] for k, v in out.items()} for i in range(n)]
+
+    # -------------------------------------------------------- schedule view
+    def pipeline_report(self, n_requests: int, ddr_slots: int = 2):
+        """Engine-level cross-request schedule of ``n_requests`` pipelined
+        copies of this session's instruction stream (hazard-audited)."""
+        from repro.runtime.schedule import pipeline_report
+        return pipeline_report(self.artifact, n_requests, ddr_slots=ddr_slots)
+
+    # -------------------------------------------------------------- serving
+    def serve(self, **kw):
+        from repro.runtime.server import Server
+        return Server(self, **kw)
+
+    def stats(self) -> dict:
+        return {"n_runs": self.n_runs, "images_served": self.images_served,
+                "cache_hit": self.cache_hit,
+                "cache_hits": self.cache.hits, "cache_misses": self.cache.misses,
+                "fused_coverage": self.artifact.fused_coverage,
+                "sim_cycles_per_image": self.artifact.sim_total_cycles}

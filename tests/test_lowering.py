@@ -103,6 +103,34 @@ def test_conv_avgpool_bit_exact(rng):
     assert all(isinstance(i, FusedLaunch) for i in prog.items)
 
 
+def test_conv_avgpool_ceil_extended_bit_exact(rng):
+    """Ceil-mode avgpool (Caffe count-include-pad: extended windows read
+    zeros, divisor stays kh*kw) lowers to a fused launch — no fallback."""
+    assert "avgpool_ceil" not in FALLBACK_REASONS
+    g = XGraph("cac")
+    g.input("data", (1, 12, 12, 3))
+    g.add("conv", "c", ("data",), oc=8, kernel=(3, 3), pad="same", relu="relu")
+    g.add("avgpool", "p", ("c",), kernel=(3, 3), stride=(2, 2))  # ceil: 12->6
+    assert g.shape("p")[1:3] == (6, 6)      # floor semantics would give 5x5
+    s = Strategy(groups=[["c", "p"]], horizontal=[], cost=0.0)
+    prog = _assert_bit_exact(g, s, rng)
+    assert all(isinstance(i, FusedLaunch) for i in prog.items)
+
+
+def test_avgpool_ceil_matches_zero_padded_reference(rng):
+    """int8_ops.avgpool ceil semantics: the bottom/right extension behaves
+    exactly like zero padding with an unchanged kh*kw divisor."""
+    import jax.numpy as jnp
+    from repro.core import int8_ops
+    x = jnp.asarray(rng.integers(-128, 128, (1, 5, 5, 2)), jnp.int8)
+    got = int8_ops.avgpool(x, kernel=(2, 2), stride=(2, 2))       # ceil: 5->3
+    xp = jnp.pad(x, ((0, 0), (0, 1), (0, 1), (0, 0)))
+    want = int8_ops.avgpool(xp, kernel=(2, 2), stride=(2, 2),
+                            ceil_mode=False)
+    assert got.shape == (1, 3, 3, 2)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
 def test_multi_conv_chain_and_gap_bit_exact(rng):
     g = XGraph("mc")
     g.input("data", (1, 12, 12, 3))
