@@ -1,7 +1,8 @@
 PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: verify test ci test-multidevice dev-deps bench-table3 serve-smoke
+.PHONY: verify test ci test-multidevice dev-deps bench-table3 serve-smoke \
+        tune-smoke bench-tune
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -20,7 +21,7 @@ test:
 # test_multidevice forces 8 host devices in subprocesses, which needs real
 # cores; on throttled 2-core CI boxes it can exceed any sane wall budget, so
 # it gates separately (make test-multidevice).
-ci: dev-deps serve-smoke
+ci: dev-deps serve-smoke tune-smoke
 	$(PY) -m pytest -q --ignore=tests/test_multidevice.py
 
 test-multidevice:
@@ -31,8 +32,20 @@ bench-table3:
 
 # Serving acceptance (ISSUE 3): tiny-resolution serve_bench run asserting
 # batched > sequential throughput, bit-exact served outputs, and a
-# hazard-free cross-request pipeline schedule.  Writes serve_bench.json
-# (uploaded as a CI build artifact).
+# hazard-free cross-request pipeline schedule.  Benchmark JSON lands under
+# the gitignored benchmarks/out/ (uploaded as a CI build artifact).
 serve-smoke:
 	$(PY) benchmarks/serve_bench.py --model vgg16 --img 32 --requests 16 \
 	    --smoke --json serve_bench.json
+
+# Autotuner acceptance (ISSUE 4): calibrate a device profile on a small op
+# set, assert the fit deviation is within the accept band and that the
+# profile-guided strategy is measured no slower end-to-end than the analytic
+# one.  Writes benchmarks/out/tune_bench.json (CI build artifact).
+tune-smoke:
+	$(PY) benchmarks/tune_bench.py --model vgg16 --img 32 --smoke \
+	    --json tune_bench.json
+
+# Full tune benchmark: all three nets, saved profiles.
+bench-tune:
+	$(PY) benchmarks/tune_bench.py --save-profiles --json tune_bench.json

@@ -1,0 +1,30 @@
+"""Canonical output location for benchmark artifacts: benchmarks/out/.
+
+Benchmarks used to drop JSON files into whatever the current working
+directory happened to be (``serve_bench.json`` landed in the repo root when
+run through make).  Everything now funnels through :func:`resolve`: bare file
+names land in the gitignored ``benchmarks/out/`` directory, explicit paths
+(anything containing a directory separator) are honored as given.
+"""
+from __future__ import annotations
+
+import os
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "out")
+
+
+def out_path(name: str) -> str:
+    """benchmarks/out/<name>, creating the directory on first use."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    return os.path.join(OUT_DIR, name)
+
+
+def resolve(path: str | None) -> str | None:
+    """Route a bare file name into benchmarks/out/; pass explicit paths (and
+    None) through untouched."""
+    if path is None:
+        return None
+    if os.path.dirname(path):
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        return path
+    return out_path(path)

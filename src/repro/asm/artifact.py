@@ -84,6 +84,32 @@ def _sha(obj) -> str:
         json.dumps(obj, sort_keys=True, default=str).encode()).hexdigest()[:16]
 
 
+def _profile_hash(profile) -> str | None:
+    """DeviceProfile | raw hash string | None -> hash string | None (duck-
+    typed so asm never imports tune)."""
+    if profile is None or isinstance(profile, str):
+        return profile
+    return profile.hash()
+
+
+def _resolve_provenance(strategy, profile_hash, pin_input) -> tuple:
+    """Normalize (profile hash, pin_input) for cache keys and compilation.
+
+    Explicit arguments win; otherwise they are inherited from the strategy
+    itself — a searched ``Strategy`` carries ``meta['profile_hash']`` when a
+    profile-guided evaluator picked it, and a ``CompiledArtifact`` (which
+    duck-types Strategy) carries both from its own compilation — so loaded
+    artifacts re-key identically to the compilations that produced them."""
+    if profile_hash is None:
+        meta = getattr(strategy, "meta", None)
+        if isinstance(meta, dict):
+            profile_hash = meta.get("profile_hash")
+    if pin_input is None:
+        ms = getattr(strategy, "mem_summary", None)
+        pin_input = bool(ms.get("pin_input")) if isinstance(ms, dict) else False
+    return profile_hash, bool(pin_input)
+
+
 def _safe_attrs(attrs: dict) -> dict:
     """JSON-serializable attr subset; folded-intrinsic parameter blobs are
     dropped (their numeric effect already lives in the quantized weights)."""
@@ -134,6 +160,16 @@ class CompiledArtifact:
         return self.program.meta["coverage"] if self.program else 0.0
 
     @property
+    def profile_hash(self) -> str | None:
+        """Hash of the device profile this plan was searched/compiled under
+        (None: the hand-written analytic model)."""
+        return self.meta.get("profile_hash")
+
+    @property
+    def pin_input(self) -> bool:
+        return bool(self.mem_summary.get("pin_input"))
+
+    @property
     def peak_ddr_bytes(self) -> int:
         return self.mem_summary["peak_bytes"]
 
@@ -174,8 +210,17 @@ class CompiledArtifact:
 
 # ----------------------------------------------------------------- compilation
 def compile_strategy(g: XGraph, strategy, dev: DeviceModel,
-                     qm: QuantizedModel | None = None) -> CompiledArtifact:
-    """Lower ``strategy`` to an addressed, hazard-checked artifact."""
+                     qm: QuantizedModel | None = None, *,
+                     profile=None, pin_input: bool | None = None
+                     ) -> CompiledArtifact:
+    """Lower ``strategy`` to an addressed, hazard-checked artifact.
+
+    ``profile`` (a ``tune.DeviceProfile``, its hash string, or None) is
+    provenance: the artifact records which calibrated cost model planned it.
+    ``pin_input`` keeps the network input's DDR region out of the planner's
+    reuse pool (see ``memory.plan_memory``)."""
+    profile_hash, pin_input = _resolve_provenance(strategy, _profile_hash(
+        profile), pin_input)
     items = order_groups(g, [list(grp) for grp in strategy.groups] +
                          [list(h) for h in strategy.horizontal])
     hset = {tuple(h) for h in strategy.horizontal}
@@ -188,7 +233,7 @@ def compile_strategy(g: XGraph, strategy, dev: DeviceModel,
             raise MemoryPlanError(f"group {grp} infeasible: {t.reason}")
         tilings.append(t)
 
-    plan = plan_memory(g, items, tilings, dev)
+    plan = plan_memory(g, items, tilings, dev, pin_input=pin_input)
     instrs = emit_strategy(g, items, tilings, dev, plan=plan)
     rep = simulator.check(instrs)   # hard-errors on any memory hazard
     program = lower.lower_strategy(g, strategy, qm)
@@ -202,7 +247,10 @@ def compile_strategy(g: XGraph, strategy, dev: DeviceModel,
         groups=[list(grp) for grp in strategy.groups],
         horizontal=[list(h) for h in strategy.horizontal],
         meta={"host_nodes": list(strategy.meta.get("host_nodes", [])),
-              "graph_name": g.name},
+              "graph_name": g.name,
+              "profile_hash": profile_hash,
+              "profile_name": (getattr(profile, "name", None)
+                               or strategy.meta.get("profile_name"))},
         exec_items=[list(grp) for grp in items],
         instrs=instrs,
         mem_summary=mem_summary,
@@ -315,29 +363,39 @@ class PlanCache:
         self.misses = 0
 
     def key(self, g: XGraph, strategy, dev: DeviceModel,
-            qm: QuantizedModel | None = None) -> tuple:
+            qm: QuantizedModel | None = None, *, profile=None,
+            pin_input: bool | None = None) -> tuple:
+        ph, pi = _resolve_provenance(strategy, _profile_hash(profile),
+                                     pin_input)
         return (graph_signature(g), dev.name, strategy_signature(strategy),
-                quant_signature(qm))
+                quant_signature(qm), ph or "analytic", pi)
 
     def get_or_compile(self, g: XGraph, strategy, dev: DeviceModel,
-                       qm: QuantizedModel | None = None
+                       qm: QuantizedModel | None = None, *, profile=None,
+                       pin_input: bool | None = None
                        ) -> tuple[CompiledArtifact, bool]:
-        k = self.key(g, strategy, dev, qm)
+        ph, pi = _resolve_provenance(strategy, _profile_hash(profile),
+                                     pin_input)
+        k = self.key(g, strategy, dev, qm, profile=ph, pin_input=pi)
         art = self._store.get(k)
         if art is not None:
             self._store[k] = self._store.pop(k)   # refresh LRU position
             self.hits += 1
             return art, True
-        art = compile_strategy(g, strategy, dev, qm=qm)
+        art = compile_strategy(g, strategy, dev, qm=qm,
+                               profile=profile if profile is not None else ph,
+                               pin_input=pi)
         self.misses += 1
         self._put(k, art)
         return art, False
 
     def put(self, g: XGraph, strategy, dev: DeviceModel, art: CompiledArtifact,
-            qm: QuantizedModel | None = None) -> None:
+            qm: QuantizedModel | None = None, *, profile=None,
+            pin_input: bool | None = None) -> None:
         """Seed a precompiled artifact (e.g. loaded from an object file) so
         later ``get_or_compile`` calls hit instead of recompiling."""
-        self._put(self.key(g, strategy, dev, qm), art)
+        self._put(self.key(g, strategy, dev, qm, profile=profile,
+                           pin_input=pin_input), art)
 
     def _put(self, k: tuple, art: CompiledArtifact) -> None:
         self._store.pop(k, None)

@@ -158,14 +158,21 @@ class ModelEvaluator:
     # that's where the 5-10% deviation band comes from.
     FEATURES = ("t_rd", "t_wr", "t_conv", "t_pool", "t_misc", "one")
 
-    def __init__(self, g: XGraph, dev: DeviceModel, train_groups: list[list[str]]):
+    def __init__(self, g: XGraph, dev: DeviceModel, train_groups: list[list[str]],
+                 targets: list[float] | None = None):
+        """``targets`` (seconds per train group) overrides the simulator as
+        the fit's ground truth — the autotuner refits this model against
+        harness-measured wall-clock (``tune.calibrate``)."""
         self.g, self.dev = g, dev
-        self._sim = SimulatorEvaluator(g, dev)
+        if targets is not None and len(targets) != len(train_groups):
+            raise ValueError(f"{len(targets)} targets for "
+                             f"{len(train_groups)} train groups")
+        self._sim = None if targets is not None else SimulatorEvaluator(g, dev)
         self._analytic = AnalyticEvaluator(g, dev)
         X, y = [], []
-        for gr in train_groups:
-            c = self._sim(gr)
-            if not math.isfinite(c):
+        for k, gr in enumerate(train_groups):
+            c = targets[k] if targets is not None else self._sim(gr)
+            if c is None or not math.isfinite(c):
                 continue
             X.append(self._features(gr))
             y.append(c)

@@ -243,6 +243,15 @@ def search(g: XGraph, dev: DeviceModel, evaluator=None,
                         cost=total, meta={"host_nodes": host_nodes,
                                           "n_pairs": len(pairs),
                                           "n_chains": len(chains)})
+    # provenance: which cost oracle picked this strategy.  A profile-guided
+    # evaluator (tune.CalibratedEvaluator) carries its DeviceProfile; the hash
+    # flows into the compiled artifact so a loaded plan knows what it was
+    # tuned for (asm.artifact / runtime.Session surface mismatches).
+    strategy.meta["evaluator"] = type(evaluator).__name__
+    profile = getattr(evaluator, "profile", None)
+    if profile is not None and hasattr(profile, "hash"):
+        strategy.meta["profile_hash"] = profile.hash()
+        strategy.meta["profile_name"] = profile.name
     _check_cover(g, strategy, plannable)
     return strategy
 

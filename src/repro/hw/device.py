@@ -56,6 +56,15 @@ class DeviceModel:
     # drive tiling and ragged-tile rounding.  0 => use the array product.
     peak_ops_override: float = 0.0
 
+    def replace(self, **overrides) -> "DeviceModel":
+        """A copy with some fields overridden.  This is how a calibrated
+        ``tune.DeviceProfile`` projects measured effective rates (DRAM
+        bandwidth, peak OPs, pool/misc lanes) back onto a device model for
+        consumers of the analytic pipeline cost (``profile.to_device_model``);
+        the array geometry (ic_p/oc_p/h_p) that drives tiling stays put
+        unless explicitly overridden."""
+        return dataclasses.replace(self, **overrides)
+
     @property
     def macs_per_cycle(self) -> int:
         return self.ic_p * self.oc_p * self.h_p

@@ -34,10 +34,18 @@ class Interval:
 
 
 def activation_intervals(g: XGraph, groups: list[list[str]],
-                         elem_bytes: int = 1) -> list[Interval]:
+                         elem_bytes: int = 1,
+                         pin_input: bool = False) -> list[Interval]:
     """Lifetimes of every DDR activation buffer for ``groups`` in execution
     order.  Buffers with no in-schedule reader (graph outputs, host-consumed
-    activations) end at ``len(groups)``."""
+    activations) end at ``len(groups)``.
+
+    ``pin_input`` extends every graph-input buffer to the end of the
+    schedule, keeping its DDR region out of the reuse pool: a later group's
+    output can then never recycle the input's address, so a pipelined
+    serving runtime needs no write-after-read guard between request r's
+    recycled SAVEs and request r+ddr_slots's pre-loaded input reads (the
+    guard that throttles cross-request overlap in ``runtime.schedule``)."""
     nsteps = len(groups)
     owner: dict[str, int] = {}
     for gi, grp in enumerate(groups):
@@ -61,8 +69,9 @@ def activation_intervals(g: XGraph, groups: list[list[str]],
     for node in g:
         if node.op != "input":
             continue
+        end = nsteps if pin_input else last_reader(node.name, -1)
         iv = Interval(f"in:{node.name}", g.fmap_bytes(node.name, elem_bytes),
-                      start=-1, end=last_reader(node.name, -1), writer_gid=-1,
+                      start=-1, end=end, writer_gid=-1,
                       parts={node.name: 0})
         intervals.append(iv)
 

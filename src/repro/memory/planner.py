@@ -31,6 +31,7 @@ class MemoryPlan:
     banks: list                     # list[BankPlan], one per group
     buf_of_node: dict               # exposed node / graph input -> buffer name
     war: list                       # per group: tuple of recycled buffer names
+    pin_input: bool = False         # graph-input regions kept out of reuse
 
     @property
     def peak_bytes(self) -> int:
@@ -79,12 +80,19 @@ class MemoryPlan:
             "n_reused": len(self.ddr.reuses),
             "double_buffered_groups": sum(
                 1 for b in self.banks if b.n_banks_in == 2),
+            "pin_input": self.pin_input,
         }
 
 
 def plan_memory(g: XGraph, groups: list[list[str]],
-                tilings: list[GroupTiling], dev: DeviceModel) -> MemoryPlan:
+                tilings: list[GroupTiling], dev: DeviceModel,
+                pin_input: bool = False) -> MemoryPlan:
     """Plan DDR + bank layout for ``groups`` (execution order) on ``dev``.
+
+    ``pin_input`` reserves the network input's DDR region for the whole
+    schedule (never recycled) — slightly higher peak, but the serving
+    runtime's cross-request pre-load guard disappears (see
+    ``memory.liveness.activation_intervals``).
 
     Raises :class:`MemoryPlanError` when a group's tile cannot fit the BRAM
     banks or the activation peak exceeds the device's DDR capacity.
@@ -92,7 +100,7 @@ def plan_memory(g: XGraph, groups: list[list[str]],
     if len(groups) != len(tilings):
         raise ValueError(f"{len(groups)} groups vs {len(tilings)} tilings")
     eb = dev.elem_bytes
-    intervals = activation_intervals(g, groups, eb)
+    intervals = activation_intervals(g, groups, eb, pin_input=pin_input)
     ddr = first_fit(intervals, align=dev.ddr_align)
     cap = getattr(dev, "ddr_bytes", 0)
     if cap and ddr.peak_bytes > cap:
@@ -119,4 +127,4 @@ def plan_memory(g: XGraph, groups: list[list[str]],
         war.append(tuple(ddr.reuses.get(iv.name, ())) if iv else ())
 
     return MemoryPlan(ddr=ddr, intervals=intervals, banks=banks,
-                      buf_of_node=buf_of_node, war=war)
+                      buf_of_node=buf_of_node, war=war, pin_input=pin_input)

@@ -65,6 +65,16 @@ class DynamicBatcher:
             self._cv.notify_all()
         return fut
 
+    def set_max_batch(self, n: int) -> None:
+        """Retarget the batch-size cap (latency-SLO-aware serving shrinks and
+        regrows it at run time).  Takes effect for the next formed batch; the
+        worker is woken in case the queue already satisfies the new cap."""
+        if n < 1:
+            raise ValueError("max_batch must be >= 1")
+        with self._cv:
+            self.max_batch = n
+            self._cv.notify_all()
+
     def close(self, wait: bool = True) -> None:
         """Flush whatever is queued, then stop the worker.  Idempotent; with
         an empty queue this returns as soon as the worker observes the flag."""

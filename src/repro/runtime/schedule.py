@@ -153,10 +153,15 @@ def _interleave(instrs: list[Instr], n_base: int) -> list[Instr]:
 
 
 def pipeline_stream(art, n_requests: int, ddr_slots: int = 2,
-                    interleave: bool = True) -> list[Instr]:
+                    interleave: bool = True, _bk_out: dict | None = None
+                    ) -> list[Instr]:
     """Replicate ``art.instrs`` per request with cross-request dependency bits
     and per-request DDR slot offsets, then software-pipeline the merged
-    program order.  ``simulator.check``-clean by design."""
+    program order.  ``simulator.check``-clean by design.
+
+    ``_bk_out``: caller-provided dict filled with the per-request resource
+    bookkeeping (``pipeline_report`` reads the pre-load guard count from it
+    without recomputing the pass)."""
     if n_requests < 1:
         raise ValueError("n_requests must be >= 1")
     if ddr_slots < 1:
@@ -166,6 +171,8 @@ def pipeline_stream(art, n_requests: int, ddr_slots: int = 2,
     n_groups = len(art.exec_items)
     banks = art.mem_summary.get("banks", [])
     bk = _base_bookkeeping(base, banks)
+    if _bk_out is not None:
+        _bk_out.update(bk)
 
     from repro.hw import get_device
     align = get_device(art.device).ddr_align if art.device else 64
@@ -219,6 +226,15 @@ class PipelineReport:
     request_windows: list          # per request (first start, last end) cycles
     ddr_slots: int
     n_instructions: int
+    # True when the artifact's memory plan pinned the network input's DDR
+    # region out of the reuse pool: no recycled write ever lands on a
+    # pre-loaded region, so the distance-ddr_slots pre-load guard vanishes
+    # from the stream and request r+1's first LOADs issue earlier.
+    pin_input: bool = False
+    # pre-load guard dependencies per pipelined request (0 when the plan pins
+    # the input region): each is an edge from request r's pre-loaded LOAD to
+    # a recycled SAVE of request r-ddr_slots
+    n_preload_guards: int = 0
     engine_timeline: dict = dataclasses.field(default_factory=dict)
     # engine -> [(start, end, opcode, "r<i>:<node>@t<k>")] in schedule order
     # (simulator.engine_windows over the pipelined stream — the Fig. 8/9
@@ -259,7 +275,8 @@ def pipeline_report(art, n_requests: int, ddr_slots: int = 2) -> PipelineReport:
     the time wheel, audit the memory plan (raises
     :class:`~repro.core.simulator.MemoryHazardError` on any hazard), and
     report per-engine utilization + modeled cross-request overlap."""
-    stream = pipeline_stream(art, n_requests, ddr_slots=ddr_slots)
+    bk: dict = {}
+    stream = pipeline_stream(art, n_requests, ddr_slots=ddr_slots, _bk_out=bk)
     rep, times = simulator.run_times(stream)
     hazards = simulator.memory_hazards(stream, times)
     # The bank audit keys windows by (group, bank), and the stream renumbers
@@ -289,4 +306,6 @@ def pipeline_report(art, n_requests: int, ddr_slots: int = 2) -> PipelineReport:
         single_request_cycles=single, busy_cycles=dict(rep.busy_cycles),
         request_windows=windows, ddr_slots=ddr_slots,
         n_instructions=rep.n_instructions,
+        pin_input=bool(art.mem_summary.get("pin_input")),
+        n_preload_guards=sum(len(v) for v in bk["pre_guard"].values()),
         engine_timeline=simulator.engine_windows(stream, times))

@@ -24,7 +24,15 @@ def _default_sizes(max_batch: int) -> list[int]:
 class Server:
     def __init__(self, session, *, max_batch: int = 8,
                  max_latency_s: float = 2e-3, allowed_sizes=None,
-                 warmup: bool = True):
+                 warmup: bool = True, target_p99_ms: float | None = None,
+                 slo_window: int = 64):
+        """``target_p99_ms`` turns on latency-SLO-aware batch sizing: the
+        server watches the p99 of the batcher's bounded latency window
+        (last ``slo_window`` submit->result samples) and walks the effective
+        max batch down the allowed-size ladder while the SLO is violated —
+        a smaller cap both shortens the batch-forming wait and the batched
+        launch itself — then back up once p99 clears the target with margin.
+        ``max_batch`` stays the hard ceiling."""
         from repro.runtime.batching import DynamicBatcher
 
         self.session = session
@@ -32,6 +40,12 @@ class Server:
                               else _default_sizes(max_batch))
         if self.allowed_sizes[-1] < max_batch:
             self.allowed_sizes.append(max_batch)
+        self.max_batch = max_batch
+        self.target_p99_ms = target_p99_ms
+        self._slo_window = max(8, slo_window)
+        self._slo_mark = 0              # n_served at the last cap change
+        self.slo_shrinks = 0
+        self.slo_grows = 0
         if warmup:
             self._warmup()
         self._batcher = DynamicBatcher(self._run, max_batch=max_batch,
@@ -54,7 +68,53 @@ class Server:
         return n
 
     def _run(self, xs):
+        self._adjust_for_slo()
         return self.session.run_batch(xs, pad_to=self._pad_size(len(xs)))
+
+    # ------------------------------------------------- SLO-aware batch cap
+    @property
+    def effective_max_batch(self) -> int:
+        return self._batcher.max_batch if hasattr(self, "_batcher") \
+            else self.max_batch
+
+    def _recent_p99_ms(self, n_fresh: int) -> float | None:
+        """p99 over the freshest ``n_fresh`` samples of the bounded window —
+        never over latencies recorded before the last cap change, which
+        describe a batch size that no longer exists."""
+        lats = list(self._batcher.latencies)[-min(self._slo_window, n_fresh):]
+        if len(lats) < 4:
+            return None
+        lats.sort()
+        return lats[min(len(lats) - 1, int(0.99 * (len(lats) - 1)))] * 1e3
+
+    def _adjust_for_slo(self) -> None:
+        """Runs on the batcher worker before each launch (single-threaded
+        with batch formation, so the cap never changes mid-batch).  Each cap
+        change starts a cooldown: no further move until enough requests have
+        been served *under the new cap* to judge it — otherwise one transient
+        violation cascades the cap straight to the floor on stale samples."""
+        if self.target_p99_ms is None:
+            return
+        cur = self._batcher.max_batch
+        n_fresh = self._batcher.n_served - self._slo_mark
+        if n_fresh < max(4, cur):
+            return
+        p99 = self._recent_p99_ms(n_fresh)
+        if p99 is None:
+            return
+        if p99 > self.target_p99_ms:
+            smaller = [s for s in self.allowed_sizes if s < cur]
+            if smaller:
+                self._batcher.set_max_batch(smaller[-1])
+                self._slo_mark = self._batcher.n_served
+                self.slo_shrinks += 1
+        elif p99 < 0.5 * self.target_p99_ms and cur < self.max_batch:
+            bigger = [s for s in self.allowed_sizes
+                      if cur < s <= self.max_batch]
+            if bigger:
+                self._batcher.set_max_batch(bigger[0])
+                self._slo_mark = self._batcher.n_served
+                self.slo_grows += 1
 
     # ---------------------------------------------------------------- client
     def submit(self, x):
@@ -85,4 +145,8 @@ class Server:
             "p50_ms": pct(0.50),
             "p99_ms": pct(0.99),
             "allowed_sizes": list(self.allowed_sizes),
+            "target_p99_ms": self.target_p99_ms,
+            "effective_max_batch": self.effective_max_batch,
+            "slo_shrinks": self.slo_shrinks,
+            "slo_grows": self.slo_grows,
         }

@@ -21,17 +21,34 @@ from __future__ import annotations
 import numpy as np
 
 
+def _resolve_profile(profile):
+    """None | DeviceProfile | name/path -> DeviceProfile | None (lazy tune
+    import: the runtime must not pay for the tuner unless profiles are used)."""
+    if profile is None:
+        return None
+    from repro.tune.profile import resolve_profile
+    return resolve_profile(profile)
+
+
 class Session:
     """Owns the executor + memory plan for one compiled model."""
 
     def __init__(self, g, strategy, dev, qm, *, backend: str = "ref",
-                 cache=None, interpret: bool = True):
+                 cache=None, interpret: bool = True, profile=None,
+                 pin_input: bool | None = None):
+        """``profile`` names the calibrated device profile to compile under —
+        a ``tune.DeviceProfile``, a profile name/path resolved through the
+        on-disk ``tune.ProfileCache``, or None (the analytic model; a
+        strategy picked by a profile-guided search still keys by the profile
+        hash it carries).  ``pin_input`` forwards to the memory planner."""
         from repro import asm
         from repro.core.executor import Int8Executor
 
+        self.profile = _resolve_profile(profile)
         self.cache = cache if cache is not None else asm.PLAN_CACHE
         self.artifact, self.cache_hit = self.cache.get_or_compile(
-            g, strategy, dev, qm=qm)
+            g, strategy, dev, qm=qm, profile=self.profile,
+            pin_input=pin_input)
         self.graph, self.qm, self.device = g, qm, dev
         self.backend = backend
         self.executor = Int8Executor(g, qm, strategy=self.artifact,
@@ -42,12 +59,30 @@ class Session:
 
     @classmethod
     def from_artifact(cls, art, *, backend: str = "ref", cache=None,
-                      interpret: bool = True) -> "Session":
+                      interpret: bool = True, profile=None) -> "Session":
         """Open a session on a loaded DNNVM object file — no recompilation:
-        the artifact is seeded into the plan cache under its own key."""
+        the artifact is seeded into the plan cache under its own key.
+
+        The artifact records the device-profile hash it was planned under;
+        loading it under a *different* profile (or under none, when it was
+        profile-planned) warns — the plan was tuned for measured rates this
+        deployment may not match."""
+        import warnings
+
         from repro import asm
         from repro.hw import get_device
 
+        resolved = _resolve_profile(profile)
+        got = resolved.hash() if resolved is not None else None
+        want = art.profile_hash
+        if got != want:
+            warnings.warn(
+                f"artifact was planned under device profile "
+                f"{want or 'analytic'} ({art.meta.get('profile_name') or 'n/a'}) "
+                f"but is being loaded under {got or 'analytic'} — its "
+                f"strategy was tuned for measured rates this session may not "
+                f"match; recompile under the current profile to re-tune",
+                stacklevel=2)
         g = art.rebuild_graph()
         qm = art.quantized_model()
         dev = get_device(art.device)
@@ -104,4 +139,6 @@ class Session:
                 "cache_hit": self.cache_hit,
                 "cache_hits": self.cache.hits, "cache_misses": self.cache.misses,
                 "fused_coverage": self.artifact.fused_coverage,
-                "sim_cycles_per_image": self.artifact.sim_total_cycles}
+                "sim_cycles_per_image": self.artifact.sim_total_cycles,
+                "profile_hash": self.artifact.profile_hash,
+                "pin_input": self.artifact.pin_input}

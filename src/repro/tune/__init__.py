@@ -1,0 +1,32 @@
+"""Profile-guided autotuning: close the compiler <-> measurement loop.
+
+The paper (§5.1, Table 2) grounds fused-op costs in on-board measurement and
+uses the learned model / simulator as cheaper proxies.  This package does the
+same for the actual XLA/Pallas backend the repo runs on:
+
+* :mod:`repro.tune.measure`   — wall-clock harness over lowered
+  ``GroupProgram`` entries (warmup / repeat / median-of-k, outlier rejection);
+* :mod:`repro.tune.profile`   — :class:`DeviceProfile`: fitted effective
+  coefficients (DRAM bandwidth, conv MACs/cycle, pool/misc lanes, per-launch
+  overhead) with versioned JSON serialization and an on-disk cache keyed by
+  (device model, backend, jax version);
+* :mod:`repro.tune.calibrate` — least-squares fit of the analytic pipeline
+  model's coefficients against harness measurements (and a measurement-refit
+  ``ModelEvaluator``), reporting the paper's 5-10% deviation band;
+* :mod:`repro.tune.evaluator` — :class:`CalibratedEvaluator`, pluggable into
+  ``pathsearch.search(evaluator=...)`` so the strategy search optimizes
+  *measured* time instead of modeled time.
+"""
+from repro.tune.calibrate import CalibrationResult, calibrate, fit_profile
+from repro.tune.evaluator import CalibratedEvaluator, group_features
+from repro.tune.measure import Measurement, MeasurementHarness, time_callable
+from repro.tune.profile import (DeviceProfile, ProfileCache, load_profile,
+                                resolve_profile, save_profile)
+
+__all__ = [
+    "CalibrationResult", "calibrate", "fit_profile",
+    "CalibratedEvaluator", "group_features",
+    "Measurement", "MeasurementHarness", "time_callable",
+    "DeviceProfile", "ProfileCache", "load_profile", "save_profile",
+    "resolve_profile",
+]

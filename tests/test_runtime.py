@@ -340,3 +340,97 @@ def test_server_serves_bit_exact_with_batching(toy_compiled):
         ref = oracle(x)
         for k in sess.outputs:
             assert np.array_equal(ref[k], got[k]), k
+
+
+# ------------------------------------------------- pin_input planner mode
+def test_pin_input_removes_input_recycling_and_guards():
+    """With pin_input the network input's DDR region leaves the reuse pool:
+    nothing recycles it, the cross-request pre-load guard count drops to
+    zero, and the modeled overlap never regresses."""
+    g = build("vgg16", img=32, num_classes=10)
+    s = pathsearch.search(g, ZU2)
+    cache = asm.PlanCache()
+    art, _ = cache.get_or_compile(g, s, ZU2)
+    artp, hit = cache.get_or_compile(g, s, ZU2, pin_input=True)
+    assert not hit                       # pin_input is part of the cache key
+    assert artp.pin_input and not art.pin_input
+
+    rep = pipeline_report(art, 4, ddr_slots=2)
+    repp = pipeline_report(artp, 4, ddr_slots=2)
+    assert rep.n_preload_guards > 0      # fc output recycles the input region
+    assert repp.n_preload_guards == 0
+    assert repp.pin_input and not rep.pin_input
+    assert repp.overlap >= rep.overlap - 1e-9
+
+
+def test_pin_input_round_trips_through_artifact(toy_compiled, tmp_path):
+    g, qm, s = toy_compiled
+    cache = asm.PlanCache()
+    art, _ = cache.get_or_compile(g, s, ZU2, qm=qm, pin_input=True)
+    path = str(tmp_path / "pinned.npz")
+    asm.save_artifact(art, path)
+    loaded = asm.load_artifact(path)
+    assert loaded.pin_input
+    # a session opened on the loaded artifact re-keys identically (pin_input
+    # inherited from mem_summary) and hits the seeded cache
+    sess = Session.from_artifact(loaded, cache=asm.PlanCache())
+    assert sess.cache_hit and sess.stats()["pin_input"]
+
+
+# ------------------------------------------------ latency-SLO batch sizing
+def _slo_server(tmp_session, **kw):
+    return tmp_session.serve(max_batch=8, max_latency_s=1e-3, warmup=False,
+                             **kw)
+
+
+def test_server_slo_shrinks_effective_batch(toy_compiled):
+    g, qm, s = toy_compiled
+    sess = Session(g, s, ZU2, qm, backend="ref", cache=asm.PlanCache())
+    x = np.zeros(tuple(g.shape("data")), np.int8)
+    # an unreachable SLO (0 ms) must walk the cap down the allowed ladder
+    with _slo_server(sess, target_p99_ms=0.0) as server:
+        for _ in range(4):               # several flushes -> several adjusts
+            futs = [server.submit(x) for _ in range(8)]
+            [f.result(timeout=60) for f in futs]
+        stats = server.stats()
+    assert stats["effective_max_batch"] == 1
+    assert stats["slo_shrinks"] >= 3
+    assert stats["target_p99_ms"] == 0.0
+
+
+def test_server_slo_regrows_when_latency_clears(toy_compiled):
+    g, qm, s = toy_compiled
+    sess = Session(g, s, ZU2, qm, backend="ref", cache=asm.PlanCache())
+    x = np.zeros(tuple(g.shape("data")), np.int8)
+    with _slo_server(sess, target_p99_ms=1e9) as server:
+        server._batcher.set_max_batch(1)     # pretend a past SLO violation
+        for _ in range(3):
+            futs = [server.submit(x) for _ in range(8)]
+            [f.result(timeout=60) for f in futs]
+        stats = server.stats()
+    assert stats["effective_max_batch"] == 8  # fully recovered to max_batch
+    assert stats["slo_grows"] >= 1
+    assert stats["slo_shrinks"] == 0
+
+
+def test_server_without_slo_keeps_static_cap(toy_compiled):
+    g, qm, s = toy_compiled
+    sess = Session(g, s, ZU2, qm, backend="ref", cache=asm.PlanCache())
+    x = np.zeros(tuple(g.shape("data")), np.int8)
+    with _slo_server(sess) as server:
+        futs = [server.submit(x) for _ in range(8)]
+        [f.result(timeout=60) for f in futs]
+        stats = server.stats()
+    assert stats["effective_max_batch"] == 8
+    assert stats["slo_shrinks"] == 0 and stats["slo_grows"] == 0
+
+
+def test_batcher_set_max_batch_validates():
+    b = DynamicBatcher(lambda xs: list(xs), max_batch=4)
+    try:
+        with pytest.raises(ValueError):
+            b.set_max_batch(0)
+        b.set_max_batch(2)
+        assert b.max_batch == 2
+    finally:
+        b.close()
