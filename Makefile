@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test ci test-multidevice dev-deps bench-table3 serve-smoke \
-        tune-smoke bench-tune
+        tune-smoke bench-tune tile-smoke bench-tile
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -21,7 +21,7 @@ test:
 # test_multidevice forces 8 host devices in subprocesses, which needs real
 # cores; on throttled 2-core CI boxes it can exceed any sane wall budget, so
 # it gates separately (make test-multidevice).
-ci: dev-deps serve-smoke tune-smoke
+ci: dev-deps serve-smoke tune-smoke tile-smoke
 	$(PY) -m pytest -q --ignore=tests/test_multidevice.py
 
 test-multidevice:
@@ -49,3 +49,16 @@ tune-smoke:
 # Full tune benchmark: all three nets, saved profiles.
 bench-tune:
 	$(PY) benchmarks/tune_bench.py --save-profiles --json tune_bench.json
+
+# Autotuned-tiling acceptance (ISSUE 5): search per-launch tile shapes on
+# vgg16@32, assert tuned shapes are never measured-slower than the analytic
+# Eq. 5/6 shapes, the e2e delta is within the gate, every searched strategy
+# still lowers with 1.00 fused coverage, and the tuned program is bit-exact.
+# Writes benchmarks/out/tile_bench.json (CI build artifact).
+tile-smoke:
+	$(PY) benchmarks/tile_bench.py --model vgg16 --img 32 --smoke \
+	    --json tile_bench.json
+
+# Full tiling benchmark: all three nets (the BENCH_tiling.json trajectory).
+bench-tile:
+	$(PY) benchmarks/tile_bench.py --json tile_bench.json

@@ -197,10 +197,18 @@ def main(argv=None) -> dict:
 
     # pinned-input variant of the same plan: the input's DDR region leaves
     # the reuse pool, the cross-request pre-load guard disappears
+    from repro.runtime.schedule import choose_ddr_slots
     from repro.runtime.schedule import pipeline_report as _pipe_report
     pinned_art, _ = sess.cache.get_or_compile(
         sess.graph, sess.artifact, sess.device, qm=sess.qm, pin_input=True)
-    pipe = {}
+    auto_rep = sess.pipeline_report(min(args.requests, 8), ddr_slots=None)
+    print(f"auto ddr_slots: {auto_rep.ddr_slots} "
+          f"(source={auto_rep.ddr_slots_source}, DRAM/compute ratio decides "
+          f"the double-buffer depth)")
+    pipe = {"auto": {"ddr_slots": auto_rep.ddr_slots,
+                     "ddr_slots_source": auto_rep.ddr_slots_source,
+                     "modeled_speedup": auto_rep.modeled_speedup,
+                     "overlap": auto_rep.overlap}}
     for slots in args.ddr_slots:
         rep = sess.pipeline_report(min(args.requests, 8), ddr_slots=slots)
         repp = _pipe_report(pinned_art, min(args.requests, 8),
@@ -250,8 +258,12 @@ def main(argv=None) -> dict:
         assert burst["images_per_s"] > seq["images_per_s"], (
             f"dynamic batching must beat sequential serving: "
             f"{burst['images_per_s']:.2f} <= {seq['images_per_s']:.2f} img/s")
-        assert all(p["utilization"] for p in pipe.values())
+        assert all(p["utilization"] for p in pipe.values()
+                   if "utilization" in p)
+        assert pipe["auto"]["ddr_slots"] >= 1
         for slots, p in pipe.items():
+            if "pinned" not in p:
+                continue
             assert p["pinned"]["n_preload_guards"] == 0, (
                 "pinned input plan must carry zero pre-load guards")
             assert p["pinned"]["overlap"] >= p["overlap"] - 1e-3, (

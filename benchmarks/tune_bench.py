@@ -87,6 +87,9 @@ def bench_model(model: str, img: int, *, backend: str, max_samples: int,
     rec = {
         "model": model, "img": img, "backend": backend,
         "deviation": res.report["deviation"],
+        # stacked (horizontal) launches are measured directly during
+        # calibration now; their own deviation band reports separately
+        "stacked": res.report.get("stacked"),
         "deviation_by_form": res.report["deviation_by_form"],
         "within_accept_band": res.report["within_accept_band"],
         "model_refit_mape": res.report.get("model_refit_mape"),
@@ -169,6 +172,10 @@ def main(argv=None) -> dict:
               f"{rec['deviation']:.1%} ({rec['combine']} form, "
               f"{rec['n_samples']} units, {rec['n_trimmed']} trimmed, "
               f"{rec['calibrate_s']:.0f}s)")
+        stk = rec.get("stacked") or {}
+        if stk.get("n_samples"):
+            print(f"  stacked launches: {stk['n_samples']} units measured "
+                  f"directly, deviation {stk['deviation']:.1%}")
         print(f"  effective: conv {eff['conv_macs_per_cycle'] or float('nan'):.2f} "
               f"MAC/cyc-equiv, launch {eff['launch_overhead_us']:.0f}us")
         if rec["strategy_changed"]:

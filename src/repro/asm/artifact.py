@@ -39,7 +39,11 @@ from repro.memory import MemoryPlanError, plan_memory
 # v3: "avgpool_ceil" left the fallback vocabulary (ceil-extended avgpool now
 # lowers to a fused launch) — a v2 program may carry that reason, which
 # RefFallback would reject on deserialization, so v2 loads are refused too.
-FORMAT_VERSION = 3
+# v4: launches carry the searched tile shape (``FusedLaunch.tile``) and the
+# artifact meta records ``tile_shapes``.  v3 artifacts load fine — a missing
+# tile record means the kernel-heuristic shapes, exactly what v3 ran.
+FORMAT_VERSION = 4
+_LOADABLE_VERSIONS = (3, FORMAT_VERSION)
 _OPCODES = ("LOAD", "SAVE", "CONV", "POOL", "MISC", "END")
 # attrs whose JSON lists must come back as tuples (XGraph convention)
 _TUPLE_ATTRS = {"shape", "kernel", "stride", "dilation", "pad"}
@@ -54,9 +58,14 @@ def graph_signature(g: XGraph) -> str:
 
 
 def strategy_signature(strategy) -> str:
+    # tile_shapes are part of the identity: the same group partition with
+    # different searched tile shapes compiles to a different program (and a
+    # different bank plan), so it must not hit the same cache entry.
+    tiles = strategy.meta.get("tile_shapes") or {}
     return _sha({"groups": list(strategy.groups),
                  "horizontal": list(strategy.horizontal),
-                 "host": sorted(strategy.meta.get("host_nodes", []))})
+                 "host": sorted(strategy.meta.get("host_nodes", [])),
+                 "tiles": {k: list(v) for k, v in sorted(tiles.items())}})
 
 
 def quant_signature(qm: QuantizedModel | None) -> str:
@@ -170,6 +179,12 @@ class CompiledArtifact:
         return bool(self.mem_summary.get("pin_input"))
 
     @property
+    def tile_shapes(self) -> dict:
+        """Searched per-launch tile shapes this plan was compiled with
+        (tile_key -> (t_h, t_w, t_oc); {} = kernel-heuristic shapes)."""
+        return dict(self.meta.get("tile_shapes") or {})
+
+    @property
     def peak_ddr_bytes(self) -> int:
         return self.mem_summary["peak_bytes"]
 
@@ -225,10 +240,41 @@ def compile_strategy(g: XGraph, strategy, dev: DeviceModel,
                          [list(h) for h in strategy.horizontal])
     hset = {tuple(h) for h in strategy.horizontal}
     ana = AnalyticEvaluator(g, dev)
+    tile_shapes = dict(strategy.meta.get("tile_shapes") or {})
     tilings = []
     for grp in items:
-        t = (tiling.solve_horizontal(g, grp, dev) if tuple(grp) in hset
-             else ana.cost(grp).tiling)
+        # A searched tile shape replaces the analytic Eq. 5/6 default, so the
+        # bank planner charges the TRUE per-tile footprints of what the
+        # kernel will actually execute (and the instruction stream carries
+        # the true tile count).  A shape that does not fit the device's
+        # buffers is a compile error, not a silent fallback.  A horizontal
+        # unit's shapes are recorded per lowered LAUNCH; when the unit's
+        # members split across several launches (mixed kernel classes) the
+        # unit-level plan takes the stacked launch's shape if there is
+        # exactly one — otherwise it keeps the analytic default (one unit,
+        # one bank plan: there is no single true shape to charge).
+        shape = tile_shapes.get(lower.tile_key(grp))
+        subset_shape = None
+        if shape is None and tuple(grp) in hset:
+            stacked = [it for it in lower.lower_horizontal(g, None, list(grp))
+                       if isinstance(it, lower.FusedLaunch)
+                       and it.kind == "horizontal"]
+            if len(stacked) == 1:
+                subset_shape = tile_shapes.get(
+                    lower.tile_key(stacked[0].nodes))
+        th, tw, toc = ((int(s) for s in (shape or subset_shape))
+                       if (shape or subset_shape) else (None,) * 3)
+        if tuple(grp) in hset:
+            t = tiling.solve_horizontal(g, grp, dev, t_w=tw, t_h=th, t_oc=toc)
+            if not t.feasible and subset_shape is not None:
+                # the subset shape was only proven feasible for the stacked
+                # launch's members — over the full unit it is best-effort,
+                # not a contract; fall back to the analytic unit plan
+                t = tiling.solve_horizontal(g, grp, dev)
+        elif shape:
+            t = tiling.solve_shape(g, grp, dev, t_w=tw, t_h=th, t_oc=toc)
+        else:
+            t = ana.cost(grp).tiling
         if not t.feasible:
             raise MemoryPlanError(f"group {grp} infeasible: {t.reason}")
         tilings.append(t)
@@ -250,7 +296,11 @@ def compile_strategy(g: XGraph, strategy, dev: DeviceModel,
               "graph_name": g.name,
               "profile_hash": profile_hash,
               "profile_name": (getattr(profile, "name", None)
-                               or strategy.meta.get("profile_name"))},
+                               or strategy.meta.get("profile_name")),
+              # tile provenance: the artifact re-keys identically to the
+              # strategy that produced it (strategy_signature hashes these)
+              "tile_shapes": {k: list(v) for k, v in tile_shapes.items()},
+              "tile_source": strategy.meta.get("tile_source")},
         exec_items=[list(grp) for grp in items],
         instrs=instrs,
         mem_summary=mem_summary,
@@ -314,9 +364,9 @@ def save_artifact(art: CompiledArtifact, path: str) -> None:
 def load_artifact(path: str) -> CompiledArtifact:
     with np.load(path, allow_pickle=False) as z:
         meta = json.loads(str(z["meta_json"]))
-        if meta["format_version"] != FORMAT_VERSION:
-            raise ValueError(f"artifact format {meta['format_version']} != "
-                             f"{FORMAT_VERSION}")
+        if meta["format_version"] not in _LOADABLE_VERSIONS:
+            raise ValueError(f"artifact format {meta['format_version']} not "
+                             f"in {_LOADABLE_VERSIONS}")
         fields = z["instr_fields"]
         deps_flat = z["deps_flat"]
         deps_off = z["deps_off"]

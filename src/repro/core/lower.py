@@ -68,6 +68,8 @@ class FusedLaunch:
     pad: tuple = ()                 # horizontal shared explicit pad (ph, pw)
     out_hw: tuple = ()              # (oh, ow) of the final output
     fc_reshape: bool = False        # fc-as-1x1-conv: flatten input first
+    tile: tuple = ()                # searched (t_h, t_w, t_oc); () = kernel
+                                    # heuristics (see ops._resolve_tile)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,8 +155,18 @@ def _elt_stage(g: XGraph, qm, name: str, main_input: str):
 
 
 # ------------------------------------------------------------- group lowering
-def lower_group(g: XGraph, qm, group: list) -> FusedLaunch | RefFallback:
-    """Lower one chain group to a launch, or a reasoned fallback."""
+def tile_key(nodes) -> str:
+    """JSON-safe key of a launch's node cover inside
+    ``strategy.meta['tile_shapes']`` (node names never contain '|')."""
+    return "|".join(nodes)
+
+
+def lower_group(g: XGraph, qm, group: list,
+                tile: tuple = ()) -> FusedLaunch | RefFallback:
+    """Lower one chain group to a launch, or a reasoned fallback.
+
+    ``tile`` is the searched (t_h, t_w, t_oc) shape the launch must execute
+    (empty: the kernel's own heuristics)."""
     nodes = tuple(group)
     ops = [g.nodes[n].op for n in group]
 
@@ -199,16 +211,21 @@ def lower_group(g: XGraph, qm, group: list) -> FusedLaunch | RefFallback:
     return FusedLaunch(kind="chain", nodes=nodes, in_name=in_name,
                        out_name=group[-1], stages=tuple(stages),
                        sides=tuple(sides), out_hw=(oh, ow),
-                       fc_reshape=(ops == ["fc"]))
+                       fc_reshape=(ops == ["fc"]),
+                       tile=tuple(int(t) for t in tile))
 
 
-def lower_horizontal(g: XGraph, qm, members: list) -> list:
+def lower_horizontal(g: XGraph, qm, members: list,
+                     tile_map: dict | None = None) -> list:
     """Lower a horizontal (shared-input) group.
 
     Compatible plain-conv members (same kernel/stride/pad, dilation 1,
     quantized) become ONE batched launch over OC-stacked weights with
     per-channel requantization shifts; the rest lower individually (a lone
-    conv or pool member is still a fused launch of its own)."""
+    conv or pool member is still a fused launch of its own).  ``tile_map``
+    maps :func:`tile_key` of a launch's node cover to its searched tile
+    shape."""
+    tile_map = tile_map or {}
     classes: dict[tuple, list] = {}
     rest = []
     for m in members:
@@ -236,9 +253,11 @@ def lower_horizontal(g: XGraph, qm, members: list) -> list:
         items.append(FusedLaunch(
             kind="horizontal", nodes=tuple(ms),
             in_name=g.nodes[ms[0]].inputs[0], members=mem,
-            kernel=(kh, kw), stride=stride, pad=pad, out_hw=(oh, ow)))
+            kernel=(kh, kw), stride=stride, pad=pad, out_hw=(oh, ow),
+            tile=tuple(int(t) for t in tile_map.get(tile_key(ms), ()))))
     for m in sorted(rest, key=list(g.nodes).index):
-        items.append(lower_group(g, qm, [m]))
+        items.append(lower_group(g, qm, [m],
+                                 tile=tile_map.get(tile_key((m,)), ())))
     return items
 
 
@@ -249,9 +268,15 @@ def lower_strategy(g: XGraph, strategy, qm=None) -> GroupProgram:
 
     ``qm`` resolves requantization shifts; without it the program is
     *structural* (valid coverage accounting, zeroed shifts) and is re-lowered
-    by the executor before running — ``meta['quantized']`` records which."""
+    by the executor before running — ``meta['quantized']`` records which.
+
+    ``strategy.meta['tile_shapes']`` (:func:`tile_key` of a launch's nodes ->
+    (t_h, t_w, t_oc), written by the tile-shape search) is stamped onto the
+    matching launches, so a tuned tile shape is a compile-time decision that
+    rides the program into the artifact."""
     from repro.core.pathsearch import order_groups
 
+    tile_map: dict = {}
     if strategy is None:
         groups = [[n] for n in g.compute_nodes()]
         horizontal: list = []
@@ -260,6 +285,7 @@ def lower_strategy(g: XGraph, strategy, qm=None) -> GroupProgram:
         groups = [list(grp) for grp in strategy.groups]
         horizontal = [list(h) for h in strategy.horizontal]
         host = list(strategy.meta.get("host_nodes", []))
+        tile_map = dict(strategy.meta.get("tile_shapes") or {})
 
     units = order_groups(g, groups + horizontal + [[h] for h in host])
     hset = {tuple(h) for h in horizontal}
@@ -275,8 +301,10 @@ def lower_strategy(g: XGraph, strategy, qm=None) -> GroupProgram:
             reasons["host_op"] += 1
             n_host += 1
             continue
-        got = (lower_horizontal(g, qm, unit) if tuple(unit) in hset
-               else [lower_group(g, qm, unit)])
+        got = (lower_horizontal(g, qm, unit, tile_map=tile_map)
+               if tuple(unit) in hset
+               else [lower_group(g, qm, unit,
+                                 tile=tile_map.get(tile_key(unit), ()))])
         items.extend(got)
         if all(isinstance(i, RefFallback) and i.reason == "folded_concat"
                for i in got):
@@ -298,6 +326,8 @@ def lower_strategy(g: XGraph, strategy, qm=None) -> GroupProgram:
         "n_fused_units": n_fused,
         "coverage": (n_fused / n_units) if n_units else 1.0,
         "n_launches": sum(kinds.values()),
+        "n_tiled_launches": sum(1 for i in items
+                                if isinstance(i, FusedLaunch) and i.tile),
         "n_fallbacks": sum(1 for i in items if isinstance(i, RefFallback)),
         "n_host_units": n_host,
         "n_folded_units": n_folded,

@@ -252,6 +252,28 @@ def search(g: XGraph, dev: DeviceModel, evaluator=None,
     if profile is not None and hasattr(profile, "hash"):
         strategy.meta["profile_hash"] = profile.hash()
         strategy.meta["profile_name"] = profile.name
+    # Tile-shape provenance: a profile-guided evaluator (tune.
+    # CalibratedEvaluator) predicts the best kernel tile shape per group, so
+    # every searched strategy carries shapes even before the measured tile
+    # search (tune.tiles.search_tile_shapes) refines them.  Keys are
+    # lower.tile_key of each launch's node cover; absent key = the kernel's
+    # default heuristics (the PR-4 behaviour).
+    if hasattr(evaluator, "tile_for"):
+        from repro.core.lower import tile_key
+
+        tile_shapes = {}
+        for grp in strategy.groups:
+            shape = evaluator.tile_for(list(grp))
+            if shape:
+                tile_shapes[tile_key(grp)] = [int(v) for v in shape]
+        if hasattr(evaluator, "tile_for_horizontal"):
+            for heads in strategy.horizontal:
+                for k, shape in evaluator.tile_for_horizontal(
+                        list(heads)).items():
+                    tile_shapes[k] = [int(v) for v in shape]
+        if tile_shapes:
+            strategy.meta["tile_shapes"] = tile_shapes
+            strategy.meta["tile_source"] = "profile"
     _check_cover(g, strategy, plannable)
     return strategy
 

@@ -122,9 +122,22 @@ def _conv_cycles(g: XGraph, name: str, dev: DeviceModel,
 def solve(g: XGraph, group: list[str], dev: DeviceModel) -> GroupTiling:
     """Tile a fused chain ``group`` (topo-ordered node names) on ``dev``.
 
-    Single-op groups use exactly the paper's Eq. 5/6.  Returns an infeasible
-    tiling (with ``reason``) when even T_w = 1 violates a buffer bound — the
-    path search then rejects the fusion (condition 1 fails).
+    Single-op groups use exactly the paper's Eq. 5/6: T_h/T_oc pinned to the
+    array parallelism, T_w maximized under the buffer bounds.  Returns an
+    infeasible tiling (with ``reason``) when even T_w = 1 violates a buffer
+    bound — the path search then rejects the fusion (condition 1 fails).
+    """
+    return solve_shape(g, group, dev)
+
+
+def solve_shape(g: XGraph, group: list[str], dev: DeviceModel,
+                t_w: int | None = None, t_h: int | None = None,
+                t_oc: int | None = None) -> GroupTiling:
+    """Tile ``group`` with an explicit shape; ``None`` dims take the paper's
+    Eq. 5/6 defaults (T_h = h_p, T_oc = oc_p, T_w maximized).  The returned
+    tiling carries the full traffic/occupancy breakdown for the chosen shape,
+    so ``enumerate_tilings`` candidates and the analytic default flow through
+    one cost pipeline.
     """
     eb = dev.elem_bytes
     last = group[-1]
@@ -146,8 +159,8 @@ def solve(g: XGraph, group: list[str], dev: DeviceModel) -> GroupTiling:
             if inp not in group_set and inp != ext_in:
                 side_inputs.append(inp)
 
-    t_h = min(dev.h_p, H)
-    t_oc = min(dev.oc_p, OC)
+    t_h = min(dev.h_p, H) if t_h is None else max(1, min(int(t_h), H))
+    t_oc = min(dev.oc_p, OC) if t_oc is None else max(1, min(int(t_oc), OC))
 
     total_weight_bytes = sum(g.param_bytes(nm, eb) for nm in group)
     weights_fit = total_weight_bytes <= dev.buf_weights_bytes
@@ -184,14 +197,21 @@ def solve(g: XGraph, group: list[str], dev: DeviceModel) -> GroupTiling:
     if not capacity_ok(1):
         return GroupTiling(False, reason="working set exceeds on-chip buffers at T_w=1")
 
-    lo, hi = 1, W
-    while lo < hi:  # binary search the largest feasible T_w
-        mid = (lo + hi + 1) // 2
-        if capacity_ok(mid):
-            lo = mid
-        else:
-            hi = mid - 1
-    t_w = lo
+    if t_w is None:
+        lo, hi = 1, W
+        while lo < hi:  # binary search the largest feasible T_w
+            mid = (lo + hi + 1) // 2
+            if capacity_ok(mid):
+                lo = mid
+            else:
+                hi = mid - 1
+        t_w = lo
+    else:
+        t_w = max(1, min(int(t_w), W))
+        if not capacity_ok(t_w):
+            return GroupTiling(
+                False, t_w=t_w, t_h=t_h, t_oc=t_oc,
+                reason=f"tile ({t_w}, {t_h}, {t_oc}) exceeds on-chip buffers")
 
     n_w = math.ceil(W / t_w)
     n_h = math.ceil(H / t_h)
@@ -264,7 +284,98 @@ def unfused_tiling(g: XGraph, name: str, dev: DeviceModel) -> GroupTiling:
     return solve(g, [name], dev)
 
 
-def solve_horizontal(g: XGraph, siblings: list[str], dev: DeviceModel) -> GroupTiling:
+# ------------------------------------------------------- tile-shape search
+def _shape_candidates_1d(p: int, extent: int) -> list[int]:
+    """Multiples of the array parallelism ``p`` (1, 2, 4, ... times), capped
+    by ``extent`` and always including the full extent."""
+    out = []
+    m = 1
+    while p * m < extent:
+        out.append(p * m)
+        m *= 2
+    out.append(extent)
+    return sorted(set(out))
+
+
+def _cells(t: GroupTiling) -> int:
+    return max(1, t.n_spatial_tiles) * max(1, t.n_oc_passes)
+
+
+def enumerate_tilings(g: XGraph, group: list[str], dev: DeviceModel, *,
+                      pareto: bool = True, max_candidates: int = 32
+                      ) -> list[GroupTiling]:
+    """Enumerate feasible tile shapes for ``group`` on ``dev``.
+
+    The paper pins (T_h, T_oc) to the array parallelism and maximizes T_w
+    (Eq. 5/6) — one point of a larger feasible region.  This enumerates the
+    grid of shapes whose T_h/T_oc are power-of-two multiples of the array
+    parallelism (plus the full extents), with T_w the maximal feasible width
+    for that (T_h, T_oc) and its halvings, every candidate capped by the
+    Eq. 6 capacity check of :func:`solve_shape`.  T_oc candidates are kept to
+    divisors of OC so a chosen shape is directly executable by the fused
+    kernel's OC-tiled grid (ragged T_h/T_w are handled by the kernel's
+    padded-coordinate masking; ragged T_oc would need weight padding).
+
+    Returns the candidates with their full traffic/occupancy breakdowns,
+    Pareto-pruned (unless ``pareto=False``) over (DRAM traffic, grid cells,
+    on-chip footprint): a shape strictly worse on all three axes can never
+    win under any cost model, so the search space handed to the tuner stays
+    small without losing the optimum."""
+    n, H, W, OC = g.shape(group[-1])
+    cands: list[GroupTiling] = []
+    seen: set[tuple] = set()
+    for t_h in _shape_candidates_1d(dev.h_p, H):
+        for t_oc in _shape_candidates_1d(dev.oc_p, OC):
+            if OC % t_oc:
+                continue            # kernel needs T_oc | OC (see docstring)
+            best = solve_shape(g, group, dev, t_h=t_h, t_oc=t_oc)
+            if not best.feasible:
+                continue
+            t_w = best.t_w
+            widths = {t_w}
+            while t_w > 1:
+                t_w = (t_w + 1) // 2
+                widths.add(t_w)
+                if len(widths) >= 4:
+                    break
+            for w in sorted(widths, reverse=True):
+                key = (w, t_h, t_oc)
+                if key in seen:
+                    continue
+                seen.add(key)
+                t = (best if w == best.t_w
+                     else solve_shape(g, group, dev, t_w=w, t_h=t_h,
+                                      t_oc=t_oc))
+                if t.feasible:
+                    cands.append(t)
+    if pareto:
+        cands = pareto_front(cands)
+    cands.sort(key=lambda t: (_cells(t), t.dram_bytes,
+                              -t.t_w, -t.t_h, -t.t_oc))
+    return cands[:max_candidates]
+
+
+def pareto_front(cands: list[GroupTiling]) -> list[GroupTiling]:
+    """Drop candidates dominated on (DRAM bytes, grid cells, footprint)."""
+    def axes(t: GroupTiling) -> tuple:
+        return (t.dram_bytes, _cells(t),
+                t.in_tile_bytes + t.out_tile_bytes + t.resident_bytes)
+
+    out = []
+    for t in cands:
+        at = axes(t)
+        dominated = any(
+            all(b <= a for a, b in zip(at, axes(o)))
+            and any(b < a for a, b in zip(at, axes(o)))
+            for o in cands if o is not t)
+        if not dominated:
+            out.append(t)
+    return out
+
+
+def solve_horizontal(g: XGraph, siblings: list[str], dev: DeviceModel,
+                     t_w: int | None = None, t_h: int | None = None,
+                     t_oc: int | None = None) -> GroupTiling:
     """Horizontal fusion (paper §4.1.3 / §5.2): siblings share one input
     feature map, which is loaded once and reused by every member.
 
@@ -272,6 +383,10 @@ def solve_horizontal(g: XGraph, siblings: list[str], dev: DeviceModel) -> GroupT
     member's output tile must co-reside.  Traffic: input once, weights and
     outputs per member.  Engine time: members execute back-to-back on the
     CONV array (they contend for it) but share the LOAD stream.
+
+    ``t_w``/``t_h``/``t_oc`` override the default shape (maximal co-resident
+    T_w at T_h = h_p, T_oc = oc_p) — the tile-shape search serializes tuned
+    shapes and the memory planner charges their true footprints.
     """
     eb = dev.elem_bytes
     parts = [solve(g, [s], dev) for s in siblings]
@@ -279,7 +394,9 @@ def solve_horizontal(g: XGraph, siblings: list[str], dev: DeviceModel) -> GroupT
         return GroupTiling(False, reason="a sibling is individually infeasible")
     src = g.producers(siblings[0])[0]
     in_bytes = g.fmap_bytes(src, eb)
-    t_h = dev.h_p
+    overridden = t_w is not None or t_h is not None or t_oc is not None
+    t_h = dev.h_p if t_h is None else max(1, int(t_h))
+    t_oc = dev.oc_p if t_oc is None else max(1, int(t_oc))
     w_need = sum(min(g.param_bytes(s, eb), dev.ic_p * dev.oc_p * _kk(g, s) * eb)
                  for s in siblings)
 
@@ -290,7 +407,7 @@ def solve_horizontal(g: XGraph, siblings: list[str], dev: DeviceModel) -> GroupT
         in_tile = dev.ic_p * max(
             _rf(g, s, t_w, t_h)[0] * _rf(g, s, t_w, t_h)[1]
             for s in siblings) * eb
-        out_tile = sum(t_w * t_h * min(dev.oc_p, g.shape(s)[3]) * eb
+        out_tile = sum(t_w * t_h * min(t_oc, g.shape(s)[3]) * eb
                        for s in siblings)
         return in_tile, out_tile
 
@@ -300,29 +417,49 @@ def solve_horizontal(g: XGraph, siblings: list[str], dev: DeviceModel) -> GroupT
 
     if w_need > dev.buf_weights_bytes or not fits(1):
         return GroupTiling(False, reason="horizontal working set exceeds buffers")
-    # largest tile width at which all members co-reside (may be narrower than
-    # each member's standalone t_w — the price of sharing the buffers)
-    lo, hi = 1, min(p.t_w for p in parts)
-    while lo < hi:
-        mid = (lo + hi + 1) // 2
-        if fits(mid):
-            lo = mid
-        else:
-            hi = mid - 1
-    t_w = lo
+    if t_w is None:
+        # largest tile width at which all members co-reside (may be narrower
+        # than each member's standalone t_w — the price of sharing buffers)
+        lo, hi = 1, min(p.t_w for p in parts)
+        while lo < hi:
+            mid = (lo + hi + 1) // 2
+            if fits(mid):
+                lo = mid
+            else:
+                hi = mid - 1
+        t_w = lo
+    else:
+        t_w = max(1, min(int(t_w), min(p.t_w for p in parts)))
+        if not fits(t_w):
+            return GroupTiling(
+                False, t_w=t_w, t_h=t_h, t_oc=t_oc,
+                reason=f"horizontal tile ({t_w}, {t_h}, {t_oc}) exceeds buffers")
     in_tile, out_tile = footprint(t_w)
     n_spatial = max(
         math.ceil(g.shape(s)[2] / t_w) * math.ceil(g.shape(s)[1] / t_h)
         * max(1, g.shape(s)[0]) for s in siblings)
-    # input loaded once (the fusion win); reload only if no member keeps it
-    reload = min(p.load_bytes // max(1, in_bytes) or 1 for p in parts)
-    load = in_bytes * max(1, reload)
+    if overridden:
+        # explicit shape: the stream must carry the TRUE tile/pass counts of
+        # what the kernel will run, not the default-shape sibling plans'
+        n_oc_passes = max(math.ceil(g.shape(s)[3] / t_oc) for s in siblings)
+        n_spatial_tiles = n_spatial
+    else:
+        n_oc_passes = max(p.n_oc_passes for p in parts)
+        n_spatial_tiles = max(n_spatial, max(p.n_spatial_tiles for p in parts))
+    # Input loaded once per shared pass (the fusion win).  The shared stream
+    # must still be replayed as often as the *least demanding* member replays
+    # it standalone: a member whose plan re-streams the input per oc pass
+    # needs the bytes resident again on every pass.  Per-member reload factor
+    # is an explicit ceil — flooring (the old ``// ... or 1``) undercounted
+    # any member whose standalone plan re-streams a partially-resident input.
+    reload = min(max(1, math.ceil(p.load_bytes / max(1, in_bytes)))
+                 for p in parts)
+    load = in_bytes * reload
     return GroupTiling(
         True,
-        t_w=t_w, t_h=t_h, t_oc=dev.oc_p,
-        n_spatial_tiles=max(n_spatial,
-                            max(p.n_spatial_tiles for p in parts)),
-        n_oc_passes=max(p.n_oc_passes for p in parts),
+        t_w=t_w, t_h=t_h, t_oc=t_oc,
+        n_spatial_tiles=n_spatial_tiles,
+        n_oc_passes=n_oc_passes,
         load_bytes=int(load),
         weight_bytes=sum(p.weight_bytes for p in parts),
         save_bytes=sum(p.save_bytes for p in parts),

@@ -27,9 +27,17 @@ avg-sum, -128 for maxpool).  That reproduces exactly the reference semantics
 of zero-padded conv, -128-padded (and ceil-extended) maxpool, and zero-padded
 (and ceil-extended, count-include-pad) avgpool from ``int8_ops``.
 
-Channel tiling: the grid's third axis tiles the FINAL conv's output channels
-(TOC); stages upstream of it compute full channels (a conv consumer needs
-all of them), stages downstream are channelwise and ride the TOC slice.
+Tile shape: the grid is (batch, row tiles, width tiles, OC tiles) — all
+three tile extents are compile-time decisions (``FusedLaunch.tile``, chosen
+by the tile-shape search; kernel heuristics otherwise).  Width tiles read
+halo-overlapped input slices (``jax.lax.dynamic_slice`` off the staged
+image, mirroring the row axis), and ragged bottom/right tiles compute into
+padded-output slack that the launcher slices off — the same padded-
+coordinate masking that handles ceil-mode pools keeps every valid position
+bit-exact at interior tile boundaries.  The OC axis tiles the FINAL conv's
+output channels (TOC); stages upstream of it compute full channels (a conv
+consumer needs all of them), stages downstream are channelwise and ride the
+TOC slice.
 
 Numerics are EXACTLY ``int8_ops``: int32 accumulate, round-half-away shift,
 saturate — validate.py enforces bit-equality.  The horizontal variant batches
@@ -85,39 +93,49 @@ def _fill_of(st) -> int:
     return I8_MIN if (st[0] == "pool" and st[2] == "max") else 0
 
 
-def chain_geometry(chain, th: int, oh: int, ow: int) -> dict:
+def chain_geometry(chain, th: int, oh: int, ow: int, tw: int | None = None
+                   ) -> dict:
     """Static tile geometry of a lowered chain.
 
     Shared by the kernel body (trace-time python) and the launcher (physical
-    padding); the two must agree or masking goes stale.
+    padding); the two must agree or masking goes stale.  ``tw`` tiles the
+    width axis (default: the full output width — the PR-4 single-column
+    grid); neighbouring width tiles read halo-overlapped input regions, and
+    ragged bottom/right tiles run on padded coordinates masked back to the
+    true extents (``n_h``/``n_w`` are ceil-divided).
     """
+    tw = ow if tw is None else tw
     m = len(chain)
     rows = [0] * m
     cols = [0] * m
     fout = [0] * m           # padded row-offset factor of stage i's output
+    foutw = [0] * m          # padded col-offset factor of stage i's output
     q = [(0, 0)] * m         # padded-coordinate offset of stage i's output
-    r, c, f, qq = th, ow, th, (0, 0)
+    r, c, f, fw, qq = th, tw, th, tw, (0, 0)
     for i in range(m - 1, -1, -1):
-        rows[i], cols[i], fout[i], q[i] = r, c, f, qq
+        rows[i], cols[i], fout[i], foutw[i], q[i] = r, c, f, fw, qq
         ekh, ekw, sh, sw, ph, pw = _stage_geom(chain[i])
         r = (r - 1) * sh + ekh
         c = (c - 1) * sw + ekw
         f = f * sh
+        fw = fw * sw
         qq = (qq[0] * sh + ph, qq[1] * sw + pw)
-    n_tiles = oh // th
+    n_h = -(-oh // th)
+    n_w = -(-ow // tw)
     sides = []
     for i, st in enumerate(chain):
         if st[0] == "elt":
             q_in = q[i]      # elt: input coords == output coords
             sides.append({"q": q_in, "rows": rows[i], "cols": cols[i],
-                          "h_req": (n_tiles - 1) * fout[i] + rows[i],
-                          "w_req": cols[i], "f": fout[i]})
+                          "h_req": (n_h - 1) * fout[i] + rows[i],
+                          "w_req": (n_w - 1) * foutw[i] + cols[i],
+                          "f": fout[i], "fw": foutw[i]})
     return {
-        "in_rows": r, "in_cols": c, "f_in": f, "q_in": qq,
-        "h_req": (n_tiles - 1) * f + r, "w_req": c,
-        "rows": rows, "cols": cols, "fout": fout, "q": q,
+        "in_rows": r, "in_cols": c, "f_in": f, "fw_in": fw, "q_in": qq,
+        "h_req": (n_h - 1) * f + r, "w_req": (n_w - 1) * fw + c,
+        "rows": rows, "cols": cols, "fout": fout, "foutw": foutw, "q": q,
         "fill0": _fill_of(chain[0]) if chain else 0,
-        "sides": sides,
+        "sides": sides, "th": th, "tw": tw, "n_h": n_h, "n_w": n_w,
     }
 
 
@@ -179,10 +197,10 @@ def _elt_apply(t, side, st):
     return jnp.clip(z, -128, 127)
 
 
-def _mask(t, row0, q, true_h, true_w, fill):
+def _mask(t, row0, col0, q, true_h, true_w, fill):
     out_r, out_c, _ = t.shape
     rows = jax.lax.broadcasted_iota(jnp.int32, (out_r, out_c, 1), 0) + row0
-    cols = jax.lax.broadcasted_iota(jnp.int32, (out_r, out_c, 1), 1)
+    cols = jax.lax.broadcasted_iota(jnp.int32, (out_r, out_c, 1), 1) + col0
     valid = ((rows >= q[0]) & (rows < q[0] + true_h)
              & (cols >= q[1]) & (cols < q[1] + true_w))
     return jnp.where(valid, t, fill)
@@ -196,9 +214,11 @@ def _chain_kernel(*refs, chain, geom):
     srefs = refs[1 + 2 * n_conv:1 + 2 * n_conv + n_side]
     o_ref = refs[-1]
     j = pl.program_id(1)
+    jw = pl.program_id(2)
 
     t = x_ref[0, pl.dslice(j * geom["f_in"], geom["in_rows"])]
-    t = t[:, :geom["in_cols"]].astype(jnp.int32)
+    t = jax.lax.dynamic_slice_in_dim(
+        t, jw * geom["fw_in"], geom["in_cols"], axis=1).astype(jnp.int32)
     wi = si = 0
     for i, st in enumerate(chain):
         out_r, out_c = geom["rows"][i], geom["cols"][i]
@@ -210,20 +230,21 @@ def _chain_kernel(*refs, chain, geom):
             t = _pool_apply(t, st, out_r, out_c)
         else:
             side = srefs[si][0, pl.dslice(j * geom["fout"][i], out_r)]
-            side = side[:, :out_c].astype(jnp.int32)
+            side = jax.lax.dynamic_slice_in_dim(
+                side, jw * geom["foutw"][i], out_c, axis=1).astype(jnp.int32)
             t = _elt_apply(t, side, st)
             si += 1
         if i + 1 < len(chain):
             true_h, true_w = (st[12], st[13]) if st[0] == "conv" else \
                              (st[9], st[10]) if st[0] == "pool" else \
                              (st[5], st[6])
-            t = _mask(t, j * geom["fout"][i], geom["q"][i], true_h, true_w,
-                      _fill_of(chain[i + 1]))
+            t = _mask(t, j * geom["fout"][i], jw * geom["foutw"][i],
+                      geom["q"][i], true_h, true_w, _fill_of(chain[i + 1]))
     o_ref[0] = _sat8(t)
 
 
 def fused_chain_pallas(x_pad, weights, biases, sides, *, chain, th, toc,
-                       oh, ow, oc, interpret=True):
+                       oh, ow, oc, tw=None, interpret=True):
     """Launch a lowered chain as one kernel.
 
     x_pad:   (N, Hp, Wp, C) int8, pre-padded per ``chain_geometry`` with the
@@ -232,35 +253,40 @@ def fused_chain_pallas(x_pad, weights, biases, sides, *, chain, th, toc,
     biases:  one (OC,) int32 per conv stage.
     sides:   one pre-padded (N, sHp, sWp, OCs) int8 per elt stage.
     chain:   static stage specs (see ``core.lower``).
+    tw:      width-tile size (default: full width).  Ragged bottom/right
+             tiles compute into a padded output that is sliced back to
+             (oh, ow) here — intermediate masking keeps every valid position
+             bit-exact, the sliced-off slack is never read.
     """
     n, hp, wp, c = x_pad.shape
-    geom = chain_geometry(chain, th, oh, ow)
+    geom = chain_geometry(chain, th, oh, ow, tw)
+    tw = geom["tw"]
     conv_idx = [i for i, st in enumerate(chain) if st[0] == "conv"]
     last_conv = conv_idx[-1] if conv_idx else -1
 
-    grid = (n, oh // th, oc // toc)
-    in_specs = [pl.BlockSpec((1, hp, wp, c), lambda i, j, k: (i, 0, 0, 0))]
+    grid = (n, geom["n_h"], geom["n_w"], oc // toc)
+    in_specs = [pl.BlockSpec((1, hp, wp, c), lambda i, j, jw, k: (i, 0, 0, 0))]
     args = [x_pad]
     for w, b, ci in zip(weights, biases, conv_idx):
         kh, kw, ic, oc_i = w.shape
         if ci == last_conv:
             in_specs.append(pl.BlockSpec((kh, kw, ic, toc),
-                                         lambda i, j, k: (0, 0, 0, k)))
-            in_specs.append(pl.BlockSpec((toc,), lambda i, j, k: (k,)))
+                                         lambda i, j, jw, k: (0, 0, 0, k)))
+            in_specs.append(pl.BlockSpec((toc,), lambda i, j, jw, k: (k,)))
         else:
             in_specs.append(pl.BlockSpec((kh, kw, ic, oc_i),
-                                         lambda i, j, k: (0, 0, 0, 0)))
-            in_specs.append(pl.BlockSpec((oc_i,), lambda i, j, k: (0,)))
+                                         lambda i, j, jw, k: (0, 0, 0, 0)))
+            in_specs.append(pl.BlockSpec((oc_i,), lambda i, j, jw, k: (0,)))
         args.extend([w, b])
     elt_idx = [i for i, st in enumerate(chain) if st[0] == "elt"]
     for ei, s in zip(elt_idx, sides):
         sn, shp, swp, sc = s.shape
         if ei > last_conv:   # rides the TOC slice of the final conv
             in_specs.append(pl.BlockSpec((1, shp, swp, toc),
-                                         lambda i, j, k: (i, 0, 0, k)))
+                                         lambda i, j, jw, k: (i, 0, 0, k)))
         else:
             in_specs.append(pl.BlockSpec((1, shp, swp, sc),
-                                         lambda i, j, k: (i, 0, 0, 0)))
+                                         lambda i, j, jw, k: (i, 0, 0, 0)))
         args.append(s)
 
     kern = functools.partial(_chain_kernel, chain=chain, geom=geom)
@@ -268,62 +294,72 @@ def fused_chain_pallas(x_pad, weights, biases, sides, *, chain, th, toc,
         kern,
         grid=grid,
         in_specs=in_specs,
-        out_specs=pl.BlockSpec((1, th, ow, toc), lambda i, j, k: (i, j, 0, k)),
-        out_shape=jax.ShapeDtypeStruct((n, oh, ow, oc), jnp.int8),
+        out_specs=pl.BlockSpec((1, th, tw, toc),
+                               lambda i, j, jw, k: (i, j, jw, k)),
+        out_shape=jax.ShapeDtypeStruct(
+            (n, geom["n_h"] * th, geom["n_w"] * tw, oc), jnp.int8),
         interpret=interpret,
     )
-    return fn(*args)
+    return fn(*args)[:, :oh, :ow]
 
 
 # ------------------------------------------------------ horizontal (stacked)
 def _horizontal_kernel(x_ref, w_ref, b_ref, s_ref, r_ref, o_ref, *,
-                       kh, kw, sh, sw, th, ow):
+                       kh, kw, sh, sw, th, tw):
     j = pl.program_id(1)
+    jw = pl.program_id(2)
     in_rows = (th - 1) * sh + kh
-    in_cols = (ow - 1) * sw + kw
+    in_cols = (tw - 1) * sw + kw
     t = x_ref[0, pl.dslice(j * th * sh, in_rows)]
-    t = t[:, :in_cols].astype(jnp.int32)
+    t = jax.lax.dynamic_slice_in_dim(
+        t, jw * tw * sw, in_cols, axis=1).astype(jnp.int32)
     ic = t.shape[-1]
     toc = w_ref.shape[-1]
-    acc = jnp.zeros((th * ow, toc), jnp.int32)
+    acc = jnp.zeros((th * tw, toc), jnp.int32)
     for i in range(kh):
         for jj in range(kw):
             sl = jax.lax.slice(t, (i, jj, 0),
                                (i + (th - 1) * sh + 1,
-                                jj + (ow - 1) * sw + 1, ic), (sh, sw, 1))
-            acc = acc + jnp.dot(sl.reshape(th * ow, ic),
+                                jj + (tw - 1) * sw + 1, ic), (sh, sw, 1))
+            acc = acc + jnp.dot(sl.reshape(th * tw, ic),
                                 w_ref[i, jj].astype(jnp.int32),
                                 preferred_element_type=jnp.int32)
     acc = acc + b_ref[...].astype(jnp.int32)[None, :]
-    y = _round_shift_vec(acc.reshape(th, ow, toc), s_ref[...])
+    y = _round_shift_vec(acc.reshape(th, tw, toc), s_ref[...])
     y = jnp.where(r_ref[...].reshape(1, 1, toc) != 0, jnp.maximum(y, 0), y)
     o_ref[0] = _sat8(y)
 
 
 def fused_horizontal_pallas(x_pad, w, b, shift_vec, relu_vec, *, stride,
-                            th, toc, oh, ow, interpret=True):
+                            th, toc, oh, ow, tw=None, interpret=True):
     """Sibling convs batched over OC-stacked weights.
 
     w: (KH, KW, IC, sum_OC) int8 stacked along OC; shift_vec/relu_vec: int32
-    per-channel requantization shift / ReLU mask.  x_pad pre-padded.
+    per-channel requantization shift / ReLU mask.  x_pad pre-padded (the
+    launcher pads enough physical slack for the ragged bottom/right tiles;
+    their zero-fed slack positions are sliced off here).
     """
     n, hp, wp, ic = x_pad.shape
     kh, kw, _, oc = w.shape
     sh, sw = stride
+    tw = ow if tw is None else tw
+    n_h = -(-oh // th)
+    n_w = -(-ow // tw)
     kern = functools.partial(_horizontal_kernel, kh=kh, kw=kw, sh=sh, sw=sw,
-                             th=th, ow=ow)
+                             th=th, tw=tw)
     fn = pl.pallas_call(
         kern,
-        grid=(n, oh // th, oc // toc),
+        grid=(n, n_h, n_w, oc // toc),
         in_specs=[
-            pl.BlockSpec((1, hp, wp, ic), lambda i, j, k: (i, 0, 0, 0)),
-            pl.BlockSpec((kh, kw, ic, toc), lambda i, j, k: (0, 0, 0, k)),
-            pl.BlockSpec((toc,), lambda i, j, k: (k,)),
-            pl.BlockSpec((toc,), lambda i, j, k: (k,)),
-            pl.BlockSpec((toc,), lambda i, j, k: (k,)),
+            pl.BlockSpec((1, hp, wp, ic), lambda i, j, jw, k: (i, 0, 0, 0)),
+            pl.BlockSpec((kh, kw, ic, toc), lambda i, j, jw, k: (0, 0, 0, k)),
+            pl.BlockSpec((toc,), lambda i, j, jw, k: (k,)),
+            pl.BlockSpec((toc,), lambda i, j, jw, k: (k,)),
+            pl.BlockSpec((toc,), lambda i, j, jw, k: (k,)),
         ],
-        out_specs=pl.BlockSpec((1, th, ow, toc), lambda i, j, k: (i, j, 0, k)),
-        out_shape=jax.ShapeDtypeStruct((n, oh, ow, oc), jnp.int8),
+        out_specs=pl.BlockSpec((1, th, tw, toc),
+                               lambda i, j, jw, k: (i, j, jw, k)),
+        out_shape=jax.ShapeDtypeStruct((n, n_h * th, n_w * tw, oc), jnp.int8),
         interpret=interpret,
     )
-    return fn(x_pad, w, b, shift_vec, relu_vec)
+    return fn(x_pad, w, b, shift_vec, relu_vec)[:, :oh, :ow]

@@ -35,6 +35,28 @@ def _tile_oc(oc: int) -> int:
     return oc
 
 
+def _resolve_tile(tile, oh: int, ow: int, oc: int, has_conv: bool) -> tuple:
+    """(th, tw, toc) the launch executes.
+
+    A serialized tile shape (``FusedLaunch.tile``, chosen by the tile-shape
+    search) wins, clamped to the output extents; a T_oc that does not divide
+    OC falls back to the divisor heuristic (the kernel's OC grid axis cannot
+    run ragged — weights would need padding).  Without a shape the PR-4
+    heuristics apply: full width, row tiles from the largest divisor, T_oc
+    from the power-of-two divisor ladder.
+    """
+    if tile:
+        th = max(1, min(int(tile[0]), oh))
+        tw = max(1, min(int(tile[1]), ow))
+        toc = max(1, min(int(tile[2]), oc))
+        if not has_conv:
+            toc = oc
+        elif oc % toc:
+            toc = _tile_oc(oc)
+        return th, tw, toc
+    return _tile_rows(oh), ow, (_tile_oc(oc) if has_conv else oc)
+
+
 def supports(*, depthwise=False, **_ignored) -> bool:
     """What the chain kernel accepts.  Depthwise convolution is the only
     structural exclusion; dilation, anisotropic strides/kernels and
@@ -52,32 +74,36 @@ def _pad_to(x, top: int, left: int, h_req: int, w_req: int, fill: int):
                    constant_values=np.int8(fill))
 
 
-@partial(jax.jit, static_argnames=("chain", "oh", "ow", "oc", "interpret"))
-def _run_chain(x, weights, biases, sides, *, chain, oh, ow, oc, interpret):
-    th = _tile_rows(oh)
+@partial(jax.jit, static_argnames=("chain", "oh", "ow", "oc", "interpret",
+                                   "tile"))
+def _run_chain(x, weights, biases, sides, *, chain, oh, ow, oc, interpret,
+               tile=()):
     has_conv = any(st[0] == "conv" for st in chain)
-    toc = _tile_oc(oc) if has_conv else oc
-    geom = chain_geometry(chain, th, oh, ow)
+    th, tw, toc = _resolve_tile(tile, oh, ow, oc, has_conv)
+    geom = chain_geometry(chain, th, oh, ow, tw)
     xp = _pad_to(x, geom["q_in"][0], geom["q_in"][1],
                  geom["h_req"], geom["w_req"], geom["fill0"])
     sp = tuple(_pad_to(s, sg["q"][0], sg["q"][1], sg["h_req"], sg["w_req"], 0)
                for s, sg in zip(sides, geom["sides"]))
     return fused_chain_pallas(xp, weights, biases, sp, chain=chain, th=th,
-                              toc=toc, oh=oh, ow=ow, oc=oc,
+                              tw=tw, toc=toc, oh=oh, ow=ow, oc=oc,
                               interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("stride", "pad", "oh", "ow", "interpret"))
+@partial(jax.jit, static_argnames=("stride", "pad", "oh", "ow", "interpret",
+                                   "tile"))
 def _run_horizontal(x, w, b, shift_vec, relu_vec, *, stride, pad, oh, ow,
-                    interpret):
+                    interpret, tile=()):
     kh, kw = w.shape[:2]
     sh, sw = stride
-    th = _tile_rows(oh)
-    toc = _tile_oc(w.shape[-1])
-    xp = _pad_to(x, pad[0], pad[1], (oh - 1) * sh + kh, (ow - 1) * sw + kw, 0)
+    th, tw, toc = _resolve_tile(tile, oh, ow, int(w.shape[-1]), True)
+    n_h = -(-oh // th)
+    n_w = -(-ow // tw)
+    xp = _pad_to(x, pad[0], pad[1], (n_h * th - 1) * sh + kh,
+                 (n_w * tw - 1) * sw + kw, 0)
     return fused_horizontal_pallas(xp, w, b, shift_vec, relu_vec,
-                                   stride=stride, th=th, toc=toc, oh=oh,
-                                   ow=ow, interpret=interpret)
+                                   stride=stride, th=th, tw=tw, toc=toc,
+                                   oh=oh, ow=ow, interpret=interpret)
 
 
 # ------------------------------------------------------------ executor hook
@@ -97,7 +123,8 @@ def run_launch(launch, env: dict, qm, interpret: bool = True) -> dict:
         y = _run_horizontal(x, w, b, shift_vec, relu_vec,
                             stride=tuple(launch.stride),
                             pad=tuple(launch.pad), oh=oh, ow=ow,
-                            interpret=interpret)
+                            interpret=interpret,
+                            tile=tuple(launch.tile))
         outs, off = {}, 0
         for m, oc_m, _, _ in launch.members:
             outs[m] = y[..., off:off + oc_m]
@@ -120,7 +147,7 @@ def run_launch(launch, env: dict, qm, interpret: bool = True) -> dict:
     oc = int(weights[-1].shape[-1]) if weights else int(x.shape[-1])
     y = _run_chain(x, tuple(weights), tuple(biases), sides,
                    chain=launch.stages, oh=oh, ow=ow, oc=oc,
-                   interpret=interpret)
+                   interpret=interpret, tile=tuple(launch.tile))
     return {launch.out_name: y}
 
 

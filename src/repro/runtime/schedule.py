@@ -215,6 +215,43 @@ def pipeline_stream(art, n_requests: int, ddr_slots: int = 2,
     return _interleave(out, n_base) if interleave else out
 
 
+# ------------------------------------------------------- ddr_slots selection
+def choose_ddr_slots(art, profile=None, *, max_slots: int = 4,
+                     default: int = 2) -> int:
+    """Pick the DDR double-buffer slot depth from the stream's DRAM/compute
+    ratio instead of the fixed default.
+
+    Request r's SAVEs must wait for request r-ddr_slots's conflicting
+    LOAD/SAVEs to retire, so when a request spends more time on the DDR
+    channels than on its busiest compute engine the distance-2 guard becomes
+    the pipeline's critical path — each extra slot pushes the write-after-
+    read horizon one request further at the cost of one more activation
+    footprint in DDR.  Compute-bound streams keep the classic ping/pong
+    ``default``.
+
+    ``profile`` (a calibrated ``tune.DeviceProfile``) rescales the DDR busy
+    cycles by measured-vs-modeled bandwidth: the instruction cycles were
+    emitted under the hand-written device model, but the slot decision should
+    reflect the bandwidth this machine actually delivers.
+    """
+    import math
+
+    from repro.core.isa import COMPUTE_ENGINES
+    from repro.hw import get_device
+
+    rep = simulator.run(art.instrs)
+    busy = rep.busy_cycles
+    ddr = busy.get("DDR_RD", 0) + busy.get("DDR_WR", 0)
+    comp = max((busy.get(e, 0) for e in COMPUTE_ENGINES), default=0)
+    if profile is not None and art.device:
+        eff = getattr(profile, "dram_rd_bytes_per_s", 0.0)
+        if eff and math.isfinite(eff):
+            ddr *= get_device(art.device).dram_bw_bytes_per_s / eff
+    if comp <= 0 or ddr <= comp:
+        return default
+    return int(min(max_slots, max(default, math.ceil(ddr / comp) + 1)))
+
+
 # ------------------------------------------------------------------- report
 @dataclasses.dataclass
 class PipelineReport:
@@ -235,6 +272,10 @@ class PipelineReport:
     # the input region): each is an edge from request r's pre-loaded LOAD to
     # a recycled SAVE of request r-ddr_slots
     n_preload_guards: int = 0
+    # how ddr_slots was decided: "explicit" (caller-passed), "auto" (stream
+    # DRAM/compute ratio under the hand-written device model), or "profile"
+    # (ratio rescaled by the calibrated profile's measured bandwidth)
+    ddr_slots_source: str = "explicit"
     engine_timeline: dict = dataclasses.field(default_factory=dict)
     # engine -> [(start, end, opcode, "r<i>:<node>@t<k>")] in schedule order
     # (simulator.engine_windows over the pipelined stream — the Fig. 8/9
@@ -270,11 +311,20 @@ class PipelineReport:
         return [e - s for s, e in self.request_windows]
 
 
-def pipeline_report(art, n_requests: int, ddr_slots: int = 2) -> PipelineReport:
+def pipeline_report(art, n_requests: int, ddr_slots: int | None = 2,
+                    profile=None) -> PipelineReport:
     """Schedule ``n_requests`` pipelined copies of the artifact's stream on
     the time wheel, audit the memory plan (raises
     :class:`~repro.core.simulator.MemoryHazardError` on any hazard), and
-    report per-engine utilization + modeled cross-request overlap."""
+    report per-engine utilization + modeled cross-request overlap.
+
+    ``ddr_slots=None`` picks the slot depth from the stream's DRAM/compute
+    ratio (:func:`choose_ddr_slots`), rescaled by ``profile`` when given —
+    the report records which path decided it (``ddr_slots_source``)."""
+    source = "explicit"
+    if ddr_slots is None:
+        ddr_slots = choose_ddr_slots(art, profile)
+        source = "profile" if profile is not None else "auto"
     bk: dict = {}
     stream = pipeline_stream(art, n_requests, ddr_slots=ddr_slots, _bk_out=bk)
     rep, times = simulator.run_times(stream)
@@ -308,4 +358,5 @@ def pipeline_report(art, n_requests: int, ddr_slots: int = 2) -> PipelineReport:
         n_instructions=rep.n_instructions,
         pin_input=bool(art.mem_summary.get("pin_input")),
         n_preload_guards=sum(len(v) for v in bk["pre_guard"].values()),
+        ddr_slots_source=source,
         engine_timeline=simulator.engine_windows(stream, times))

@@ -123,11 +123,18 @@ class Session:
         return [{k: v[i:i + 1] for k, v in out.items()} for i in range(n)]
 
     # -------------------------------------------------------- schedule view
-    def pipeline_report(self, n_requests: int, ddr_slots: int = 2):
+    def pipeline_report(self, n_requests: int, ddr_slots: int | None = 2,
+                        profile=None):
         """Engine-level cross-request schedule of ``n_requests`` pipelined
-        copies of this session's instruction stream (hazard-audited)."""
+        copies of this session's instruction stream (hazard-audited).
+
+        ``ddr_slots=None`` selects the double-buffer slot depth from the
+        stream's DRAM/compute ratio under ``profile`` (defaulting to the
+        profile this session was compiled with)."""
         from repro.runtime.schedule import pipeline_report
-        return pipeline_report(self.artifact, n_requests, ddr_slots=ddr_slots)
+        return pipeline_report(self.artifact, n_requests, ddr_slots=ddr_slots,
+                               profile=(profile if profile is not None
+                                        else self.profile))
 
     # -------------------------------------------------------------- serving
     def serve(self, **kw):

@@ -15,13 +15,19 @@ same for the actual XLA/Pallas backend the repo runs on:
   ``ModelEvaluator``), reporting the paper's 5-10% deviation band;
 * :mod:`repro.tune.evaluator` — :class:`CalibratedEvaluator`, pluggable into
   ``pathsearch.search(evaluator=...)`` so the strategy search optimizes
-  *measured* time instead of modeled time.
+  *measured* time instead of modeled time;
+* :mod:`repro.tune.tiles`     — tile-shape search: enumerate the Eq. 6
+  feasible (T_h, T_w, T_oc) candidates per lowered launch, rank them with
+  the profile, measure the top-K, and serialize the winners into the
+  strategy/artifact (``search_tile_shapes``).
 """
 from repro.tune.calibrate import CalibrationResult, calibrate, fit_profile
 from repro.tune.evaluator import CalibratedEvaluator, group_features
 from repro.tune.measure import Measurement, MeasurementHarness, time_callable
 from repro.tune.profile import (DeviceProfile, ProfileCache, load_profile,
                                 resolve_profile, save_profile)
+from repro.tune.tiles import (TileSearchReport, predict_best_shape,
+                              search_tile_shapes, shape_candidates)
 
 __all__ = [
     "CalibrationResult", "calibrate", "fit_profile",
@@ -29,4 +35,6 @@ __all__ = [
     "Measurement", "MeasurementHarness", "time_callable",
     "DeviceProfile", "ProfileCache", "load_profile", "save_profile",
     "resolve_profile",
+    "TileSearchReport", "predict_best_shape", "search_tile_shapes",
+    "shape_candidates",
 ]

@@ -55,9 +55,11 @@ def _analytic_vec(t: tiling.GroupTiling, dev: DeviceModel):
 
 def _chain_vec(g: XGraph, launch: lower.FusedLaunch):
     """Work one chain launch performs, from the same static geometry the
-    kernel itself uses (``chain_geometry``)."""
+    kernel itself uses (``chain_geometry``), honoring the launch's searched
+    tile shape when one is set (``ops._resolve_tile`` is the single source of
+    truth for what the kernel will actually run)."""
     from repro.kernels.conv_fused.conv_fused import chain_geometry
-    from repro.kernels.conv_fused.ops import _tile_oc, _tile_rows
+    from repro.kernels.conv_fused.ops import _resolve_tile
 
     stages = launch.stages
     names = [st[1] for st in stages]
@@ -66,16 +68,16 @@ def _chain_vec(g: XGraph, launch: lower.FusedLaunch):
     last_conv = conv_pos[-1] if conv_pos else -1
     oc = (g.shape(names[last_conv])[3] if conv_pos
           else g.shape(launch.in_name)[3])
-    th = _tile_rows(oh)
-    toc = _tile_oc(oc) if conv_pos else oc
-    geom = chain_geometry(stages, th, oh, ow)
+    th, tw, toc = _resolve_tile(tuple(launch.tile), oh, ow, oc,
+                                bool(conv_pos))
+    geom = chain_geometry(stages, th, oh, ow, tw)
     n = max(1, g.shape(names[-1])[0])
 
     in_shape = g.shape(launch.in_name)
     ic_in = (in_shape[1] * in_shape[2] * in_shape[3] if launch.fc_reshape
              else in_shape[3])
 
-    row_cells = n * (oh // th)
+    row_cells = n * geom["n_h"] * geom["n_w"]
     oc_cells = max(1, oc // toc)
 
     def out_depth(i: int) -> int:
@@ -96,8 +98,8 @@ def _chain_vec(g: XGraph, launch: lower.FusedLaunch):
     # NOT here — they are grid-invariant, converted once per launch, and
     # priced inside conv_steps; folding them into rd couples the per-cell
     # staging rate to multi-MB panels and wrecks the fit for cheap launches.
-    rd = geom["h_req"] * geom["w_req"] * ic_in * row_cells
-    wr = th * ow * out_depth(len(stages) - 1) * row_cells * oc_cells
+    rd = geom["in_rows"] * geom["in_cols"] * ic_in * row_cells
+    wr = th * tw * out_depth(len(stages) - 1) * row_cells * oc_cells
     conv = pool = misc = 0.0
     conv_steps = pool_steps = misc_steps = 0.0
     prev_depth = ic_in
@@ -140,7 +142,7 @@ def _chain_vec(g: XGraph, launch: lower.FusedLaunch):
 
 
 def _horizontal_vec(g: XGraph, launch: lower.FusedLaunch):
-    from repro.kernels.conv_fused.ops import _tile_oc, _tile_rows
+    from repro.kernels.conv_fused.ops import _resolve_tile
 
     oh, ow = launch.out_hw
     kh, kw = launch.kernel
@@ -148,16 +150,17 @@ def _horizontal_vec(g: XGraph, launch: lower.FusedLaunch):
     oc = sum(oc_m for _, oc_m, _, _ in launch.members)
     ic = g.shape(launch.in_name)[3]
     n = max(1, g.shape(launch.members[0][0])[0])
-    th = _tile_rows(oh)
-    toc = _tile_oc(oc)
-    cells = n * (oh // th) * max(1, oc // toc)
-    hp = (oh - 1) * sh + kh + 0  # padded extents staged per cell
-    wp = (ow - 1) * sw + kw
+    th, tw, toc = _resolve_tile(tuple(launch.tile), oh, ow, oc, True)
+    n_h = -(-oh // th)
+    n_w = -(-ow // tw)
+    cells = n * n_h * n_w * max(1, oc // toc)
+    hp = (th - 1) * sh + kh          # per-cell staged input extents
+    wp = (tw - 1) * sw + kw
     f = np.zeros(len(COEF_NAMES))
     f[_RD] = hp * wp * ic * cells          # activation staging (see _chain_vec)
-    f[_WR] = th * ow * toc * cells
-    f[_CONV] = th * ow * ic * kh * kw * toc * cells
-    f[_CONV_STEPS] = (kh * kw * (th * ow * ic + th * ow * toc) * cells
+    f[_WR] = th * tw * toc * cells
+    f[_CONV] = th * tw * ic * kh * kw * toc * cells
+    f[_CONV_STEPS] = (kh * kw * (th * tw * ic + th * tw * toc) * cells
                       + kh * kw * ic * oc)
     f[_CELLS] = cells
     f[_LAUNCH] = 1.0
@@ -265,3 +268,44 @@ class CalibratedEvaluator:
         total = sum(self(list(grp)) for grp in strategy.groups)
         total += sum(self.horizontal_cost(list(h)) for h in strategy.horizontal)
         return total if math.isfinite(total) else INFEASIBLE
+
+    # ------------------------------------------------------------ tile shapes
+    def tile_for(self, group: list) -> tuple | None:
+        """Profile-predicted best kernel tile shape for ``group``, or ``None``
+        when the kernel-default heuristics win.  ``pathsearch.search`` calls
+        this on every searched group, so strategies picked under a calibrated
+        profile carry predicted shapes even before anything is measured.
+        Only meaningful in the "kernel" feature domain — an "analytic"
+        profile prices the abstract tiling, not what the launch executes."""
+        if self.profile.features != "kernel":
+            return None
+        key = ("tile", tuple(group))
+        if key in self._cache:
+            return self._cache[key]
+        from repro.tune import tiles
+        item = lower.lower_group(self.g, None, list(group))
+        shape = None
+        if isinstance(item, lower.FusedLaunch):
+            shape = tiles.predict_best_shape(self.profile, self.g, self.dev,
+                                             item)
+        self._cache[key] = shape
+        return shape
+
+    def tile_for_horizontal(self, heads: list) -> dict:
+        """Predicted shapes for a horizontal group's lowered launches, keyed
+        by ``lower.tile_key`` of each launch's node cover ({} = defaults)."""
+        if self.profile.features != "kernel":
+            return {}
+        key = ("tile-h", tuple(heads))
+        if key in self._cache:
+            return self._cache[key]
+        from repro.tune import tiles
+        out = {}
+        for item in lower.lower_horizontal(self.g, None, list(heads)):
+            if isinstance(item, lower.FusedLaunch):
+                shape = tiles.predict_best_shape(self.profile, self.g,
+                                                 self.dev, item)
+                if shape:
+                    out[lower.tile_key(item.nodes)] = shape
+        self._cache[key] = out
+        return out

@@ -204,46 +204,78 @@ class MeasurementHarness:
         self._cache[key] = m
         return m
 
-    def measure_set(self, groups: list, passes: int | None = None) -> list:
-        """Measure many groups in round-robin passes.
+    def _round_robin(self, units: list, passes: int | None) -> list:
+        """The shared epoch-robust timing core: warm + probe every callable
+        first, then each pass times every unit once — a shared-box
+        interference epoch inflates whole passes (which MAD rejection
+        discards), never one unit's samples relative to another's.
 
-        Shared-box interference comes in epochs that last longer than one
-        measurement; timing group after group would bake a different epoch
-        into each unit and wreck every cross-group ratio the calibration fit
-        depends on.  Instead all callables are built and warmed first, then
-        each pass times every group once — an epoch inflates whole passes,
-        and the per-group median with MAD rejection across passes discards
-        the inflated ones."""
-        passes = passes if passes is not None else self.repeats
+        ``units``: (nodes, kind, fn, ins) per measurable; returns one
+        :class:`Measurement` per unit, in order."""
         import jax
 
-        units = []
-        for grp in groups:
-            key = ("chain", tuple(grp))
-            if key in self._cache:
-                continue
-            fn, ins, kind = self._group_callable(grp)
+        passes = passes if passes is not None else self.repeats
+        prepped = []
+        for nodes, kind, fn, ins in units:
             for _ in range(max(1, self.warmup)):
                 jax.block_until_ready(fn(*ins))
             t0 = time.perf_counter()
             jax.block_until_ready(fn(*ins))
             probe = max(time.perf_counter() - t0, 1e-9)
             calls = int(min(512, max(1, math.ceil(self.min_sample_s / probe))))
-            units.append((key, grp, fn, ins, calls, []))
+            prepped.append((nodes, kind, fn, ins, calls, []))
         for _ in range(max(1, passes)):
-            for key, grp, fn, ins, calls, samples in units:
+            for nodes, kind, fn, ins, calls, samples in prepped:
                 t0 = time.perf_counter()
                 for _ in range(calls):
                     out = fn(*ins)
                 jax.block_until_ready(out)
                 samples.append((time.perf_counter() - t0) / calls)
-        for key, grp, fn, ins, calls, samples in units:
+        out_ms = []
+        for nodes, kind, fn, ins, calls, samples in prepped:
             loc, spread, n_ok, n_rej = _robust_center(
                 samples, self.reject_nmad, self.center)
-            self._cache[key] = Measurement(
-                nodes=tuple(grp), kind="chain", seconds=loc, spread=spread,
-                n_samples=n_ok, n_rejected=n_rej, samples=tuple(samples))
+            out_ms.append(Measurement(
+                nodes=tuple(nodes), kind=kind, seconds=loc, spread=spread,
+                n_samples=n_ok, n_rejected=n_rej, samples=tuple(samples)))
+        return out_ms
+
+    def measure_set(self, groups: list, passes: int | None = None) -> list:
+        """Measure many groups in round-robin passes (see
+        :meth:`_round_robin` for why cross-group ratios need this)."""
+        todo = []
+        for grp in groups:
+            key = ("chain", tuple(grp))
+            if key in self._cache:
+                continue
+            fn, ins, kind = self._group_callable(grp)
+            todo.append((key, (grp, "chain", fn, ins)))
+        for (key, _), m in zip(todo,
+                               self._round_robin([u for _, u in todo],
+                                                 passes)):
+            self._cache[key] = m
         return [self._cache[("chain", tuple(grp))] for grp in groups]
+
+    def measure_item_set(self, items: list, passes: int | None = None
+                         ) -> list[Measurement]:
+        """Measure arbitrary program items in round-robin passes — the same
+        epoch-robust machinery as :meth:`measure_set`, but over prebuilt
+        ``FusedLaunch`` / ``RefFallback`` descriptors.  This is how the
+        tile-shape search times the top-K tile candidates of every lowered
+        unit: a tile variant is just another measurable item, and measuring
+        all variants of all units in the same passes means interference
+        epochs inflate whole passes instead of biasing one candidate.
+
+        Results are NOT memoized: tile variants of one launch share the same
+        node cover, so the per-group cache key would collide."""
+        units = []
+        for item in items:
+            kind = (item.kind if isinstance(item, lower.FusedLaunch)
+                    else "fallback")
+            fn, ins = build_item_callable(self.g, self.qm, item,
+                                          interpret=self.interpret)
+            units.append((item.nodes, kind, fn, ins))
+        return self._round_robin(units, passes)
 
     def measure_horizontal(self, heads: list) -> Measurement:
         """Measure a horizontal (shared-input) group: the sum of its lowered
