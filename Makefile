@@ -2,7 +2,7 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test ci test-multidevice dev-deps bench-table3 serve-smoke \
-        tune-smoke bench-tune tile-smoke bench-tile
+        tune-smoke bench-tune tile-smoke bench-tile obs-smoke bench-obs
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -21,7 +21,7 @@ test:
 # test_multidevice forces 8 host devices in subprocesses, which needs real
 # cores; on throttled 2-core CI boxes it can exceed any sane wall budget, so
 # it gates separately (make test-multidevice).
-ci: dev-deps serve-smoke tune-smoke tile-smoke
+ci: dev-deps serve-smoke tune-smoke tile-smoke obs-smoke
 	$(PY) -m pytest -q --ignore=tests/test_multidevice.py
 
 test-multidevice:
@@ -62,3 +62,16 @@ tile-smoke:
 # Full tiling benchmark: all three nets (the BENCH_tiling.json trajectory).
 bench-tile:
 	$(PY) benchmarks/tile_bench.py --json tile_bench.json
+
+# Observability acceptance (ISSUE 6): serve vgg16@32 with the span tracer +
+# sampling drift profiler on; assert the exported trace is valid Perfetto
+# JSON carrying compile/serve/modeled tracks, the metrics snapshot is
+# complete, the drift band is finite, and traced throughput is within 10% of
+# untraced.  Trace + JSON land in benchmarks/out/ (CI build artifacts).
+obs-smoke:
+	$(PY) benchmarks/obs_bench.py --model vgg16 --img 32 --requests 24 \
+	    --smoke --trace obs_trace.json --json obs_bench.json
+
+# Full observability benchmark: more requests, default knobs.
+bench-obs:
+	$(PY) benchmarks/obs_bench.py --json obs_bench.json

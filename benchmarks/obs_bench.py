@@ -1,0 +1,218 @@
+"""Observability benchmark: one served run, fully instrumented.
+
+Builds a model under a calibrated device profile with the span tracer enabled
+from the very start — so the exported trace carries the whole compile
+pipeline (frontend -> pathsearch -> tiling -> memory plan -> assemble ->
+simulate -> lower) — then serves R requests through the dynamic-batching
+server twice: once with the tracer disabled (baseline throughput) and once
+with tracing plus the sampling drift profiler on.  The simulator's
+``engine_windows`` timeline of the same plan is appended as a parallel
+"modeled" Perfetto process, so one trace JSON shows compile stages, per-
+request/batch serve spans, and the predicted engine overlap side by side.
+
+The profile is calibrated against the cycle simulator (fast, deterministic)
+and the drift profiler samples through the same simulator oracle — the smoke
+gate checks the *machinery* (valid trace, complete metrics, finite drift
+band, tracing overhead <= 10%); wall-clock drift measurement is exercised by
+``serve_bench --profile`` and the unit tests.
+
+--smoke asserts those four criteria and is wired into `make ci`
+(`make obs-smoke`); the trace JSON lands in benchmarks/out/ where CI uploads
+it as an artifact.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import time
+
+import numpy as np
+
+
+def build_profiled_session(model: str, img: int, backend: str):
+    """Graph + sim-calibrated profile + profile-guided compiled session."""
+    from repro.cnn import build, init_params
+    from repro.core import executor, pathsearch, quantize
+    from repro.core.cost import SimulatorEvaluator
+    from repro.hw import ZU2
+    from repro.runtime import Session
+    from repro.tune import CalibratedEvaluator, calibrate
+
+    g = build(model, img=img, num_classes=10) if img != 224 else build(model)
+    params = init_params(g)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal(g.shape("data")).astype(np.float32)
+    qm = quantize.calibrate(g, params, x, executor.run_float)
+    sim = SimulatorEvaluator(g, ZU2)
+    res = calibrate(g, qm, ZU2, measure_fn=lambda grp: sim(grp),
+                    features="analytic")
+    p = res.profile
+    s = pathsearch.search(g, ZU2, evaluator=CalibratedEvaluator(g, ZU2, p))
+    sess = Session(g, s, ZU2, qm, backend=backend, profile=p)
+    return sess, sim
+
+
+def sim_measure_fn(sess, sim):
+    """Deterministic drift oracle: each plan unit re-priced by the cycle
+    simulator (the same ground truth the profile was fitted on)."""
+    def fn(item):
+        from repro.core import lower
+        if isinstance(item, lower.FusedLaunch) and item.kind == "horizontal":
+            return sim.horizontal_cost([m[0] for m in item.members])
+        return sim(list(item.nodes))
+    return fn
+
+
+def serve_once(sess, reqs, *, max_batch: int, max_latency_s: float) -> float:
+    """Serve all requests through the batching server; returns images/s."""
+    srv = sess.serve(max_batch=max_batch, max_latency_s=max_latency_s,
+                     warmup=False)
+    try:
+        t0 = time.perf_counter()
+        futs = [srv.submit(x) for x in reqs]
+        for f in futs:
+            f.result(timeout=120)
+        wall = time.perf_counter() - t0
+    finally:
+        srv.close()
+    return len(reqs) / wall
+
+
+REQUIRED_COMPILE_SPANS = {"frontend", "pathsearch", "tiling", "memory_plan",
+                          "assemble", "simulate", "lower"}
+REQUIRED_SERVE_SPANS = {"queue_wait", "execute", "batch_form",
+                        "batch_execute", "resolve", "pad", "launch"}
+REQUIRED_METRICS = {"serve.requests", "serve.batches", "serve.batch_size",
+                    "serve.latency_ms", "serve.queue_wait_ms",
+                    "serve.execute_ms", "serve.queue_depth",
+                    "plan_cache.misses", "executor.calls",
+                    "executor.fused_launches", "executor.fallback_launches",
+                    "drift.samples", "drift.aggregate_deviation"}
+
+
+def main(argv=None) -> dict:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--model", default="vgg16",
+                    choices=["vgg16", "resnet50", "googlenet"])
+    ap.add_argument("--img", type=int, default=32)
+    ap.add_argument("--requests", type=int, default=48)
+    ap.add_argument("--max-batch", type=int, default=8)
+    ap.add_argument("--max-latency-ms", type=float, default=5.0)
+    ap.add_argument("--backend", default="pallas", choices=["ref", "pallas"])
+    ap.add_argument("--drift-every", type=int, default=3,
+                    help="sample the drift profiler every Nth batch launch")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="alternate untraced/traced trials, keep best of "
+                         "each (controls for clock drift)")
+    ap.add_argument("--trace", dest="trace_path", default="obs_trace.json",
+                    help="trace JSON output; bare names land in "
+                         "benchmarks/out/")
+    ap.add_argument("--json", dest="json_path", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="assert trace validity, metrics completeness, "
+                         "finite drift band, and <=10%% tracing overhead")
+    args = ap.parse_args(argv)
+    import outdir
+    args.trace_path = outdir.resolve(args.trace_path)
+    args.json_path = outdir.resolve(args.json_path)
+
+    from repro.hw import ZU2
+    from repro.obs import REGISTRY, TRACER, DriftProfiler
+
+    # tracer on from the start: the compile pipeline below lands in the trace
+    TRACER.enable()
+    sess, sim = build_profiled_session(args.model, args.img, args.backend)
+    reqs = [np.asarray(x, np.int8) for x in
+            np.random.default_rng(1).integers(
+                -128, 128, (args.requests,) + tuple(
+                    sess.graph.shape("data")[1:]))]
+    print(f"{args.model}@{args.img} backend={args.backend} "
+          f"requests={args.requests} "
+          f"fused_coverage={sess.artifact.fused_coverage:.2f} "
+          f"profile={sess.profile.hash()}")
+
+    # warm every allowed batch shape outside all timed windows
+    serve_once(sess, reqs[:args.max_batch], max_batch=args.max_batch,
+               max_latency_s=args.max_latency_ms * 1e-3)
+
+    dp = DriftProfiler.from_session(sess, every=args.drift_every,
+                                    measure_fn=sim_measure_fn(sess, sim))
+
+    # alternate untraced / traced+profiled trials; best-of each mode
+    untraced = traced = 0.0
+    for _ in range(max(1, args.repeats)):
+        TRACER.disable()
+        sess.attach_drift(None)
+        untraced = max(untraced, serve_once(
+            sess, reqs, max_batch=args.max_batch,
+            max_latency_s=args.max_latency_ms * 1e-3))
+        TRACER.enable()
+        sess.attach_drift(dp)
+        traced = max(traced, serve_once(
+            sess, reqs, max_batch=args.max_batch,
+            max_latency_s=args.max_latency_ms * 1e-3))
+    sess.attach_drift(None)
+    overhead = 1.0 - traced / untraced
+    print(f"untraced   : {untraced:8.2f} img/s")
+    print(f"traced     : {traced:8.2f} img/s  "
+          f"(overhead {overhead:+.1%}, tracing + drift sampling)")
+
+    # modeled engine timeline of the same plan, as a parallel trace process
+    rep = sess.pipeline_report(min(args.requests, 4), ddr_slots=None)
+    n_modeled = TRACER.add_engine_windows(rep.engine_timeline, ZU2.freq_hz)
+    print(f"modeled track: {n_modeled} engine windows "
+          f"(ddr_slots={rep.ddr_slots}, source={rep.ddr_slots_source})")
+
+    TRACER.export(args.trace_path)
+    print(f"wrote {args.trace_path} ({len(TRACER)} spans, "
+          f"{TRACER.n_dropped} dropped)")
+
+    drift = dp.report().to_json()
+    print(f"drift: aggregate={drift['aggregate_deviation']:.3f} "
+          f"band={drift['band']:.3f} drifted={drift['drifted']} "
+          f"({drift['n_sampled']} sampling passes)")
+    metrics = REGISTRY.snapshot()
+
+    out = {"model": args.model, "img": args.img, "backend": args.backend,
+           "requests": args.requests, "max_batch": args.max_batch,
+           "untraced_images_per_s": untraced,
+           "traced_images_per_s": traced,
+           "tracing_overhead": overhead,
+           "n_spans": len(TRACER), "n_dropped": TRACER.n_dropped,
+           "n_modeled_spans": n_modeled,
+           "trace_path": args.trace_path,
+           "drift": drift, "metrics": metrics}
+    if args.json_path:
+        with open(args.json_path, "w") as f:
+            json.dump(out, f, indent=2, default=str)
+        print(f"wrote {args.json_path}")
+
+    if args.smoke:
+        doc = json.load(open(args.trace_path))       # valid JSON round trip
+        xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+        names = {e["name"] for e in xs}
+        missing = (REQUIRED_COMPILE_SPANS | REQUIRED_SERVE_SPANS) - names
+        assert not missing, f"trace is missing spans: {sorted(missing)}"
+        pids = {e["pid"]: e["args"]["name"] for e in doc["traceEvents"]
+                if e["ph"] == "M" and e["name"] == "process_name"}
+        procs = {pids[e["pid"]] for e in xs}
+        assert {"measured", "modeled"} <= procs, procs
+        assert all(e["ts"] >= 0 and e["dur"] >= 0 for e in xs)
+        missing_m = REQUIRED_METRICS - set(metrics)
+        assert not missing_m, f"metrics snapshot incomplete: {missing_m}"
+        assert metrics["serve.requests"]["value"] >= args.requests
+        agg = drift["aggregate_deviation"]
+        assert agg is not None and math.isfinite(agg), agg
+        assert math.isfinite(drift["band"]) and drift["band"] > 0
+        assert drift["profile_match"], "artifact/profile hash mismatch"
+        assert traced >= 0.9 * untraced, (
+            f"tracing overhead above 10%: {untraced:.2f} -> {traced:.2f} "
+            f"img/s")
+        print("SMOKE OK: valid Perfetto trace (compile + serve + modeled "
+              "tracks), complete metrics, finite drift band, overhead <=10%")
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -29,11 +29,13 @@ import time
 import numpy as np
 
 
-def build_session(model: str, img: int, backend: str, use_host_partition: bool):
+def build_session(model: str, img: int, backend: str, use_host_partition: bool,
+                  profile=None):
     from repro.cnn import build, init_params
     from repro.core import executor, partition, pathsearch, quantize
     from repro.hw import ZU2
     from repro.runtime import Session
+    from repro.runtime.session import _resolve_profile
 
     g = build(model, img=img, num_classes=10) if img != 224 else build(model)
     params = init_params(g)
@@ -41,14 +43,33 @@ def build_session(model: str, img: int, backend: str, use_host_partition: bool):
     x = rng.standard_normal(g.shape("data")).astype(np.float32)
     qm = quantize.calibrate(g, params, x, executor.run_float)
     dv = partition.device_of(g, "paper") if use_host_partition else None
+    profile = _resolve_profile(profile)
+    evaluator = None
+    if profile is not None:
+        from repro.tune import CalibratedEvaluator
+        evaluator = CalibratedEvaluator(g, ZU2, profile)
     t0 = time.perf_counter()
-    strategy = (pathsearch.search(g, ZU2, device_of=dv) if dv
-                else pathsearch.search(g, ZU2))
+    strategy = pathsearch.search(g, ZU2, evaluator=evaluator, device_of=dv)
     t_search = time.perf_counter() - t0
     t0 = time.perf_counter()
-    sess = Session(g, strategy, ZU2, qm, backend=backend)
+    sess = Session(g, strategy, ZU2, qm, backend=backend, profile=profile)
     t_compile = time.perf_counter() - t0
     return sess, {"search_s": t_search, "compile_s": t_compile}
+
+
+def drift_summary(sess) -> dict:
+    """Modeled-vs-measured drift of the served plan, when the session carries
+    a device profile (see ``repro.obs.drift``); cheap to skip when it
+    doesn't — serve_bench's default analytic run has nothing to drift from."""
+    if sess.profile is None:
+        return {"available": False, "reason": "no device profile"}
+    from repro.obs import DriftProfiler
+
+    dp = DriftProfiler.from_session(sess, every=1)
+    dp.prepare()
+    dp.sample()
+    rep = dp.report()
+    return {"available": True, **rep.to_json()}
 
 
 def make_requests(sess, n: int, seed: int = 1):
@@ -139,6 +160,10 @@ def main(argv=None) -> dict:
     ap.add_argument("--target-p99-ms", type=float, default=None,
                     help="latency SLO: shrink the effective max batch while "
                          "the observed p99 exceeds this target")
+    ap.add_argument("--profile", default=None,
+                    help="calibrated device profile (name or JSON path) to "
+                         "search/compile under; also enables the drift "
+                         "summary in the JSON output")
     ap.add_argument("--json", dest="json_path", default=None,
                     help="bare names land in benchmarks/out/ (gitignored)")
     ap.add_argument("--repeats", type=int, default=1,
@@ -154,7 +179,8 @@ def main(argv=None) -> dict:
         args.repeats = 3
 
     sess, compile_times = build_session(
-        args.model, args.img, args.backend, args.host_partition)
+        args.model, args.img, args.backend, args.host_partition,
+        profile=args.profile)
     reqs = make_requests(sess, args.requests)
     print(f"{args.model}@{args.img} backend={args.backend} "
           f"requests={args.requests} fused_coverage="
@@ -236,6 +262,17 @@ def main(argv=None) -> dict:
               f"{repp.n_preload_guards}, peak DDR "
               f"{sess.artifact.peak_ddr_bytes} -> {pinned_art.peak_ddr_bytes}B")
 
+    # observability payload: the shared metrics registry has been counting
+    # the whole run (plan cache, executor launches, serve histograms); the
+    # drift summary compares measured unit times against the profile's
+    # predictions when the session was compiled under one
+    from repro.obs import REGISTRY
+    metrics_snapshot = REGISTRY.snapshot()
+    drift = drift_summary(sess)
+    if drift["available"]:
+        print(f"drift: aggregate={drift['aggregate_deviation']:.3f} "
+              f"band={drift['band']:.3f} drifted={drift['drifted']}")
+
     out = {
         "model": args.model, "img": args.img, "backend": args.backend,
         "requests": args.requests, "max_batch": args.max_batch,
@@ -247,6 +284,8 @@ def main(argv=None) -> dict:
         "bit_exact": {"sequential": exact_seq, "batched": exact_bat},
         "pipeline": pipe,
         "batched_vs_sequential": burst["images_per_s"] / seq["images_per_s"],
+        "metrics": metrics_snapshot,
+        "drift": drift,
     }
     if args.json_path:
         with open(args.json_path, "w") as f:

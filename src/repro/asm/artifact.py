@@ -234,6 +234,8 @@ def compile_strategy(g: XGraph, strategy, dev: DeviceModel,
     provenance: the artifact records which calibrated cost model planned it.
     ``pin_input`` keeps the network input's DDR region out of the planner's
     reuse pool (see ``memory.plan_memory``)."""
+    from repro.obs.trace import TRACER
+
     profile_hash, pin_input = _resolve_provenance(strategy, _profile_hash(
         profile), pin_input)
     items = order_groups(g, [list(grp) for grp in strategy.groups] +
@@ -242,47 +244,57 @@ def compile_strategy(g: XGraph, strategy, dev: DeviceModel,
     ana = AnalyticEvaluator(g, dev)
     tile_shapes = dict(strategy.meta.get("tile_shapes") or {})
     tilings = []
-    for grp in items:
-        # A searched tile shape replaces the analytic Eq. 5/6 default, so the
-        # bank planner charges the TRUE per-tile footprints of what the
-        # kernel will actually execute (and the instruction stream carries
-        # the true tile count).  A shape that does not fit the device's
-        # buffers is a compile error, not a silent fallback.  A horizontal
-        # unit's shapes are recorded per lowered LAUNCH; when the unit's
-        # members split across several launches (mixed kernel classes) the
-        # unit-level plan takes the stacked launch's shape if there is
-        # exactly one — otherwise it keeps the analytic default (one unit,
-        # one bank plan: there is no single true shape to charge).
-        shape = tile_shapes.get(lower.tile_key(grp))
-        subset_shape = None
-        if shape is None and tuple(grp) in hset:
-            stacked = [it for it in lower.lower_horizontal(g, None, list(grp))
-                       if isinstance(it, lower.FusedLaunch)
-                       and it.kind == "horizontal"]
-            if len(stacked) == 1:
-                subset_shape = tile_shapes.get(
-                    lower.tile_key(stacked[0].nodes))
-        th, tw, toc = ((int(s) for s in (shape or subset_shape))
-                       if (shape or subset_shape) else (None,) * 3)
-        if tuple(grp) in hset:
-            t = tiling.solve_horizontal(g, grp, dev, t_w=tw, t_h=th, t_oc=toc)
-            if not t.feasible and subset_shape is not None:
-                # the subset shape was only proven feasible for the stacked
-                # launch's members — over the full unit it is best-effort,
-                # not a contract; fall back to the analytic unit plan
-                t = tiling.solve_horizontal(g, grp, dev)
-        elif shape:
-            t = tiling.solve_shape(g, grp, dev, t_w=tw, t_h=th, t_oc=toc)
-        else:
-            t = ana.cost(grp).tiling
-        if not t.feasible:
-            raise MemoryPlanError(f"group {grp} infeasible: {t.reason}")
-        tilings.append(t)
+    with TRACER.span("tiling", cat="compile", track="compile",
+                     n_groups=len(items)):
+        for grp in items:
+            # A searched tile shape replaces the analytic Eq. 5/6 default, so
+            # the bank planner charges the TRUE per-tile footprints of what
+            # the kernel will actually execute (and the instruction stream
+            # carries the true tile count).  A shape that does not fit the
+            # device's buffers is a compile error, not a silent fallback.  A
+            # horizontal unit's shapes are recorded per lowered LAUNCH; when
+            # the unit's members split across several launches (mixed kernel
+            # classes) the unit-level plan takes the stacked launch's shape
+            # if there is exactly one — otherwise it keeps the analytic
+            # default (one unit, one bank plan: there is no single true shape
+            # to charge).
+            shape = tile_shapes.get(lower.tile_key(grp))
+            subset_shape = None
+            if shape is None and tuple(grp) in hset:
+                stacked = [it for it in
+                           lower.lower_horizontal(g, None, list(grp))
+                           if isinstance(it, lower.FusedLaunch)
+                           and it.kind == "horizontal"]
+                if len(stacked) == 1:
+                    subset_shape = tile_shapes.get(
+                        lower.tile_key(stacked[0].nodes))
+            th, tw, toc = ((int(s) for s in (shape or subset_shape))
+                           if (shape or subset_shape) else (None,) * 3)
+            if tuple(grp) in hset:
+                t = tiling.solve_horizontal(g, grp, dev, t_w=tw, t_h=th,
+                                            t_oc=toc)
+                if not t.feasible and subset_shape is not None:
+                    # the subset shape was only proven feasible for the
+                    # stacked launch's members — over the full unit it is
+                    # best-effort, not a contract; fall back to the analytic
+                    # unit plan
+                    t = tiling.solve_horizontal(g, grp, dev)
+            elif shape:
+                t = tiling.solve_shape(g, grp, dev, t_w=tw, t_h=th, t_oc=toc)
+            else:
+                t = ana.cost(grp).tiling
+            if not t.feasible:
+                raise MemoryPlanError(f"group {grp} infeasible: {t.reason}")
+            tilings.append(t)
 
-    plan = plan_memory(g, items, tilings, dev, pin_input=pin_input)
-    instrs = emit_strategy(g, items, tilings, dev, plan=plan)
+    with TRACER.span("memory_plan", cat="compile", track="compile"):
+        plan = plan_memory(g, items, tilings, dev, pin_input=pin_input)
+    with TRACER.span("assemble", cat="compile", track="compile") as sp:
+        instrs = emit_strategy(g, items, tilings, dev, plan=plan)
+        sp.set(n_instrs=len(instrs))
     rep = simulator.check(instrs)   # hard-errors on any memory hazard
-    program = lower.lower_strategy(g, strategy, qm)
+    with TRACER.span("lower", cat="compile", track="compile"):
+        program = lower.lower_strategy(g, strategy, qm)
 
     mem_summary = plan.summary()
     mem_summary["banks"] = [
@@ -427,15 +439,19 @@ class PlanCache:
         ph, pi = _resolve_provenance(strategy, _profile_hash(profile),
                                      pin_input)
         k = self.key(g, strategy, dev, qm, profile=ph, pin_input=pi)
+        from repro.obs.metrics import REGISTRY
+
         art = self._store.get(k)
         if art is not None:
             self._store[k] = self._store.pop(k)   # refresh LRU position
             self.hits += 1
+            REGISTRY.counter("plan_cache.hits").inc()
             return art, True
         art = compile_strategy(g, strategy, dev, qm=qm,
                                profile=profile if profile is not None else ph,
                                pin_input=pi)
         self.misses += 1
+        REGISTRY.counter("plan_cache.misses").inc()
         self._put(k, art)
         return art, False
 

@@ -288,10 +288,20 @@ class Int8Executor:
         return jax.jit(fn)
 
     def __call__(self, x: np.ndarray) -> dict:
+        from repro.obs.metrics import REGISTRY
+
         self._validate_input(x)
         if self._fn is None:
             self._fn = self._build()
         out = self._fn(jnp.asarray(x))
+        REGISTRY.counter("executor.calls").inc()
+        if self.program is not None:
+            # the jitted program dispatches every item per call; meta carries
+            # the per-call split the lowering decided on
+            REGISTRY.counter("executor.fused_launches").inc(
+                self.program.meta.get("n_launches", 0))
+            REGISTRY.counter("executor.fallback_launches").inc(
+                self.program.meta.get("n_fallbacks", 0))
         return {k: np.asarray(v) for k, v in out.items()}
 
 

@@ -24,12 +24,16 @@ from repro.core.xgraph import XGraph, POINTWISE
 
 
 def lower(g: XGraph) -> XGraph:
-    fold_pad(g)
-    fold_intrinsics(g)
-    fuse_pointwise(g)
-    prune_flatten(g)
-    fold_concat(g)
-    g.validate()
+    from repro.obs.trace import TRACER
+
+    with TRACER.span("frontend", cat="compile", track="compile",
+                     graph=g.name):
+        fold_pad(g)
+        fold_intrinsics(g)
+        fuse_pointwise(g)
+        prune_flatten(g)
+        fold_concat(g)
+        g.validate()
     return g
 
 

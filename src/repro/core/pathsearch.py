@@ -132,6 +132,14 @@ def partition_chain(g: XGraph, chain: list[str], pairs: set, evaluator) -> tuple
 # ------------------------------------------------------------ the search
 def search(g: XGraph, dev: DeviceModel, evaluator=None,
            device_of=None, enable_horizontal: bool = True) -> Strategy:
+    from repro.obs.trace import TRACER
+    with TRACER.span("pathsearch", cat="compile", track="compile",
+                     graph=g.name):
+        return _search(g, dev, evaluator, device_of, enable_horizontal)
+
+
+def _search(g: XGraph, dev: DeviceModel, evaluator=None,
+            device_of=None, enable_horizontal: bool = True) -> Strategy:
     evaluator = evaluator or AnalyticEvaluator(g, dev)
     plannable = {n.name for n in g
                  if n.op != "input" and (device_of is None or device_of(n.name) == "acc")}

@@ -86,11 +86,17 @@ def engine_windows(instrs: list[Instr], times: dict) -> dict:
 
 def check(instrs: list[Instr]) -> SimReport:
     """Simulate and audit the memory plan; raises MemoryHazardError."""
-    rep, times = run_times(instrs)
-    hazards = memory_hazards(instrs, times)
-    if hazards:
-        raise MemoryHazardError(
-            f"{len(hazards)} memory hazard(s):\n  " + "\n  ".join(hazards[:10]))
+    from repro.obs.trace import TRACER
+
+    with TRACER.span("simulate", cat="compile", track="compile",
+                     n_instrs=len(instrs)) as sp:
+        rep, times = run_times(instrs)
+        hazards = memory_hazards(instrs, times)
+        if hazards:
+            raise MemoryHazardError(
+                f"{len(hazards)} memory hazard(s):\n  "
+                + "\n  ".join(hazards[:10]))
+        sp.set(total_cycles=rep.total_cycles)
     return rep
 
 

@@ -1,0 +1,18 @@
+"""Observability layer: tracing, metrics, and modeled-vs-measured drift.
+
+The three pieces the paper's validation environment implies but never shows:
+``trace`` (where did the milliseconds go — Perfetto-exportable spans across
+compile and serve, with the simulator's modeled engine timeline as a parallel
+track), ``metrics`` (bounded counters/gauges/histograms the server keeps),
+and ``drift`` (is the device profile the plan was ranked under still true).
+"""
+from repro.obs.metrics import (REGISTRY, Counter, Gauge, Histogram,
+                               MetricsRegistry)
+from repro.obs.trace import TRACER, SpanRecord, Tracer, span, traced
+from repro.obs.drift import DriftProfiler, DriftReport, UnitDrift
+
+__all__ = [
+    "TRACER", "Tracer", "SpanRecord", "span", "traced",
+    "REGISTRY", "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "DriftProfiler", "DriftReport", "UnitDrift",
+]

@@ -22,6 +22,10 @@ import threading
 import time
 from concurrent.futures import Future
 
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import DEFAULT_BATCH_BUCKETS
+
 
 class BatcherClosed(RuntimeError):
     """submit() after close()."""
@@ -30,10 +34,17 @@ class BatcherClosed(RuntimeError):
 class DynamicBatcher:
     def __init__(self, run_batch, *, max_batch: int = 8,
                  max_latency_s: float = 2e-3, clock=time.monotonic,
-                 latency_window: int = 16384):
+                 latency_window: int = 16384, registry=None, tracer=None):
         """``run_batch(xs) -> list[result]`` executes one batch (one result
         per request, same order).  ``latency_window`` bounds the retained
-        latency samples (a long-running server must not grow without bound)."""
+        latency samples (a long-running server must not grow without bound).
+
+        Besides end-to-end ``latencies`` (submit -> result), the batcher keeps
+        ``queue_waits`` (submit -> batch formed, per request) and
+        ``execute_s`` (batch formed -> results back, per batch) so an SLO
+        controller can tell a queue-bound p99 violation from a launch-bound
+        one.  When the shared tracer is enabled, each request gets a
+        queue-wait + execute track and each batch a batch-track span."""
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self._run_batch = run_batch
@@ -44,6 +55,8 @@ class DynamicBatcher:
         self._cv = threading.Condition(self._lock)
         self._queue: collections.deque = collections.deque()
         self._closed = False
+        self._seq = 0                    # request sequence id (trace tracks)
+        self._n_batches = 0
         self.batch_sizes: collections.Counter = collections.Counter()
         self.n_served = 0
         # submit -> result per request, most recent latency_window samples;
@@ -51,6 +64,24 @@ class DynamicBatcher:
         # right after result() returns never sees a partial sample set
         self.latencies: collections.deque = collections.deque(
             maxlen=latency_window)
+        # submit -> batch formation, per request (same window discipline)
+        self.queue_waits: collections.deque = collections.deque(
+            maxlen=latency_window)
+        # batch formation -> results back, per BATCH
+        self.execute_s: collections.deque = collections.deque(
+            maxlen=latency_window)
+        self._registry = (registry if registry is not None
+                          else obs_metrics.REGISTRY)
+        self._tracer = tracer if tracer is not None else obs_trace.TRACER
+        self._m_requests = self._registry.counter("serve.requests")
+        self._m_batches = self._registry.counter("serve.batches")
+        self._m_errors = self._registry.counter("serve.errors")
+        self._m_depth = self._registry.gauge("serve.queue_depth")
+        self._m_batch = self._registry.histogram("serve.batch_size",
+                                                 DEFAULT_BATCH_BUCKETS)
+        self._m_latency = self._registry.histogram("serve.latency_ms")
+        self._m_wait = self._registry.histogram("serve.queue_wait_ms")
+        self._m_exec = self._registry.histogram("serve.execute_ms")
         self._worker = threading.Thread(target=self._loop, daemon=True,
                                         name="dnnvm-batcher")
         self._worker.start()
@@ -61,8 +92,11 @@ class DynamicBatcher:
         with self._cv:
             if self._closed:
                 raise BatcherClosed("batcher is closed")
-            self._queue.append((x, fut, self._clock()))
+            self._seq += 1
+            self._queue.append((x, fut, self._clock(), self._seq))
+            self._m_depth.set(len(self._queue))
             self._cv.notify_all()
+        self._m_requests.inc()
         return fut
 
     def set_max_batch(self, n: int) -> None:
@@ -117,19 +151,56 @@ class DynamicBatcher:
                 batch = [self._queue.popleft()
                          for _ in range(min(self.max_batch,
                                             len(self._queue)))]
+                self._m_depth.set(len(self._queue))
             self._execute(batch)
 
     def _execute(self, batch) -> None:
-        xs = [x for x, _, _ in batch]
+        t_form = self._clock()
+        xs = [x for x, _, _, _ in batch]
         try:
             results = self._run_batch(xs)
         except Exception as e:  # surface the failure on every waiting future
-            for _, fut, _ in batch:
+            self._m_errors.inc(len(batch))
+            for _, fut, _, _ in batch:
                 fut.set_exception(e)
             return
+        t_done = self._clock()
         self.batch_sizes[len(batch)] += 1
         self.n_served += len(batch)
-        now = self._clock()
-        self.latencies.extend(now - t0 for _, _, t0 in batch)
-        for (_, fut, _), res in zip(batch, results):
+        self._n_batches += 1
+        self.execute_s.append(t_done - t_form)
+        self._m_batches.inc()
+        self._m_batch.observe(len(batch))
+        self._m_exec.observe((t_done - t_form) * 1e3)
+        for _, _, t0, _ in batch:
+            self.queue_waits.append(t_form - t0)
+            self.latencies.append(t_done - t0)
+            self._m_wait.observe((t_form - t0) * 1e3)
+            self._m_latency.observe((t_done - t0) * 1e3)
+        for (_, fut, _, _), res in zip(batch, results):
             fut.set_result(res)
+        if self._tracer.enabled:
+            self._trace_batch(batch, t_form, t_done, self._clock())
+
+    def _trace_batch(self, batch, t_form: float, t_done: float,
+                     t_resolved: float) -> None:
+        """Emit serve spans for one completed batch: per-request queue-wait +
+        execute on a ``req<seq>`` track, plus batch-form / launch / resolve on
+        the shared batch track.  Timestamps are the batcher's own clock
+        (``time.monotonic`` by default — the tracer's default clock too, so
+        these land on the same axis as compile spans)."""
+        tr = self._tracer
+        bid = self._n_batches
+        for _, _, t0, seq in batch:
+            track = f"req{seq}"
+            tr.add_span("queue_wait", t0, t_form, cat="serve", track=track,
+                        args={"batch": bid})
+            tr.add_span("execute", t_form, t_done, cat="serve", track=track,
+                        args={"batch": bid})
+        oldest = min(t0 for _, _, t0, _ in batch)
+        tr.add_span("batch_form", oldest, t_form, cat="serve", track="batch",
+                    args={"batch": bid, "size": len(batch)})
+        tr.add_span("batch_execute", t_form, t_done, cat="serve",
+                    track="batch", args={"batch": bid, "size": len(batch)})
+        tr.add_span("resolve", t_done, t_resolved, cat="serve", track="batch",
+                    args={"batch": bid})

@@ -46,6 +46,14 @@ class Server:
         self._slo_mark = 0              # n_served at the last cap change
         self.slo_shrinks = 0
         self.slo_grows = 0
+        # shrink causes, from the batcher's split timings: queue-bound means
+        # the p99 violation lived in batch-forming wait, launch-bound in the
+        # batched execute itself (different remedies: the first wants a
+        # smaller forming window / more replicas, the second a smaller batch)
+        self.slo_shrinks_queue_bound = 0
+        self.slo_shrinks_launch_bound = 0
+        from repro.obs import metrics as obs_metrics
+        self._registry = obs_metrics.REGISTRY
         if warmup:
             self._warmup()
         self._batcher = DynamicBatcher(self._run, max_batch=max_batch,
@@ -77,6 +85,13 @@ class Server:
         return self._batcher.max_batch if hasattr(self, "_batcher") \
             else self.max_batch
 
+    @staticmethod
+    def _p99_ms(samples) -> float | None:
+        lats = sorted(samples)
+        if not lats:
+            return None
+        return lats[min(len(lats) - 1, int(0.99 * (len(lats) - 1)))] * 1e3
+
     def _recent_p99_ms(self, n_fresh: int) -> float | None:
         """p99 over the freshest ``n_fresh`` samples of the bounded window —
         never over latencies recorded before the last cap change, which
@@ -84,8 +99,15 @@ class Server:
         lats = list(self._batcher.latencies)[-min(self._slo_window, n_fresh):]
         if len(lats) < 4:
             return None
-        lats.sort()
-        return lats[min(len(lats) - 1, int(0.99 * (len(lats) - 1)))] * 1e3
+        return self._p99_ms(lats)
+
+    def _classify_violation(self, n_fresh: int) -> str:
+        """Which half of the fresh latency window dominates its p99: the
+        per-request queue wait or the batched launch."""
+        k = min(self._slo_window, n_fresh)
+        wait = self._p99_ms(list(self._batcher.queue_waits)[-k:]) or 0.0
+        execute = self._p99_ms(list(self._batcher.execute_s)[-k:]) or 0.0
+        return "queue" if wait > execute else "launch"
 
     def _adjust_for_slo(self) -> None:
         """Runs on the batcher worker before each launch (single-threaded
@@ -108,6 +130,12 @@ class Server:
                 self._batcher.set_max_batch(smaller[-1])
                 self._slo_mark = self._batcher.n_served
                 self.slo_shrinks += 1
+                cause = self._classify_violation(n_fresh)
+                if cause == "queue":
+                    self.slo_shrinks_queue_bound += 1
+                else:
+                    self.slo_shrinks_launch_bound += 1
+                self._registry.counter(f"serve.slo_shrink.{cause}_bound").inc()
         elif p99 < 0.5 * self.target_p99_ms and cur < self.max_batch:
             bigger = [s for s in self.allowed_sizes
                       if cur < s <= self.max_batch]
@@ -115,6 +143,7 @@ class Server:
                 self._batcher.set_max_batch(bigger[0])
                 self._slo_mark = self._batcher.n_served
                 self.slo_grows += 1
+                self._registry.counter("serve.slo_grow").inc()
 
     # ---------------------------------------------------------------- client
     def submit(self, x):
@@ -144,9 +173,13 @@ class Server:
             "mean_batch": (n / sum(hist.values())) if hist else 0.0,
             "p50_ms": pct(0.50),
             "p99_ms": pct(0.99),
+            "queue_wait_p99_ms": self._p99_ms(self._batcher.queue_waits),
+            "execute_p99_ms": self._p99_ms(self._batcher.execute_s),
             "allowed_sizes": list(self.allowed_sizes),
             "target_p99_ms": self.target_p99_ms,
             "effective_max_batch": self.effective_max_batch,
             "slo_shrinks": self.slo_shrinks,
             "slo_grows": self.slo_grows,
+            "slo_shrinks_queue_bound": self.slo_shrinks_queue_bound,
+            "slo_shrinks_launch_bound": self.slo_shrinks_launch_bound,
         }

@@ -56,6 +56,7 @@ class Session:
         self.outputs = [n.name for n in g if not g.consumers(n.name)]
         self.n_runs = 0
         self.images_served = 0
+        self.drift = None               # optional DriftProfiler (attach_drift)
 
     @classmethod
     def from_artifact(cls, art, *, backend: str = "ref", cache=None,
@@ -87,9 +88,13 @@ class Session:
         qm = art.quantized_model()
         dev = get_device(art.device)
         cache = cache if cache is not None else asm.PLAN_CACHE
-        cache.put(g, art, dev, art, qm=qm)
+        # seed and construct under the SAME resolved profile so the cache key
+        # matches (no recompile) and the session keeps the profile — dropping
+        # it here used to lose profile-guided ddr_slots auto-selection in
+        # pipeline_report and the session-side profile_hash provenance
+        cache.put(g, art, dev, art, qm=qm, profile=resolved)
         return cls(g, art, dev, qm, backend=backend, cache=cache,
-                   interpret=interpret)
+                   interpret=interpret, profile=resolved)
 
     # ------------------------------------------------------------- execution
     def _stack(self, xs, pad_to: int | None = None):
@@ -104,22 +109,36 @@ class Session:
                 [x, np.zeros((pad_to - n,) + x.shape[1:], x.dtype)], axis=0)
         return x, n
 
+    def attach_drift(self, profiler) -> None:
+        """Attach an ``obs.DriftProfiler``; every ``run``/``run_batch`` then
+        counts as one observed launch (the profiler samples every Nth)."""
+        self.drift = profiler
+
     def run(self, x) -> dict:
         """One request; accepts (H, W, C) or (1, H, W, C) int8."""
         x = np.asarray(x)
         out = self.executor(x[None] if x.ndim == 3 else x)
         self.n_runs += 1
         self.images_served += 1
+        if self.drift is not None:
+            self.drift.observe_launch()
         return out
 
     def run_batch(self, xs, pad_to: int | None = None) -> list[dict]:
         """Serve N queued requests as ONE batched launch; returns one output
         dict per request (leading batch dim 1, so results are directly
         comparable with per-request execution)."""
-        x, n = self._stack(xs, pad_to=pad_to)
-        out = self.executor(x)
+        from repro.obs.trace import TRACER
+        with TRACER.span("pad", cat="serve", track="batch", n=len(xs),
+                         pad_to=pad_to):
+            x, n = self._stack(xs, pad_to=pad_to)
+        with TRACER.span("launch", cat="serve", track="batch",
+                         batch=int(x.shape[0])):
+            out = self.executor(x)
         self.n_runs += 1
         self.images_served += n
+        if self.drift is not None:
+            self.drift.observe_launch()
         return [{k: v[i:i + 1] for k, v in out.items()} for i in range(n)]
 
     # -------------------------------------------------------- schedule view
@@ -148,4 +167,6 @@ class Session:
                 "fused_coverage": self.artifact.fused_coverage,
                 "sim_cycles_per_image": self.artifact.sim_total_cycles,
                 "profile_hash": self.artifact.profile_hash,
+                "session_profile_hash": (self.profile.hash()
+                                         if self.profile else None),
                 "pin_input": self.artifact.pin_input}

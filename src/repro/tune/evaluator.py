@@ -227,6 +227,40 @@ def predict_seconds(profile: DeviceProfile, f, n_fill: int) -> float:
     return float(steady + (stage.sum() - steady) / max(1, n_fill) + fixed)
 
 
+def predict_item_seconds(profile: DeviceProfile, g: XGraph, dev: DeviceModel,
+                         item) -> float | None:
+    """Predicted seconds for one lowered ``GroupProgram`` item under a fitted
+    profile, or ``None`` when the item has no finite prediction (host-op
+    fallbacks, infeasible tilings, layout-pruned concats).
+
+    Unlike :meth:`CalibratedEvaluator.__call__`, which prices a *candidate
+    group* by re-lowering it with default tiles, this prices the item the
+    artifact actually carries — honoring its searched ``tile`` — so the drift
+    profiler compares measurement against the same prediction the plan was
+    built on."""
+    if isinstance(item, lower.RefFallback):
+        if all(g.nodes[nm].op == "concat" and g.nodes[nm].attrs.get("folded")
+               for nm in item.nodes):
+            return None                      # pruned at emit; nothing runs
+        got = group_features(g, dev, list(item.nodes),
+                             domain=profile.features)
+        return None if got is None else predict_seconds(profile, *got)
+    if item.kind == "horizontal":
+        heads = [m[0] for m in item.members]
+        t = tiling.solve_horizontal(g, heads, dev)
+        if not t.feasible:
+            return None
+        fa, n_fill = _analytic_vec(t, dev)
+        f = _horizontal_vec(g, item) if profile.features == "kernel" else fa
+        return predict_seconds(profile, f, n_fill)
+    gc = AnalyticEvaluator(g, dev).cost(list(item.nodes))
+    if not gc.feasible:
+        return None
+    fa, n_fill = _analytic_vec(gc.tiling, dev)
+    f = _chain_vec(g, item) if profile.features == "kernel" else fa
+    return predict_seconds(profile, f, n_fill)
+
+
 class CalibratedEvaluator:
     """Group cost = profile-priced measured-world work (drop-in for
     ``AnalyticEvaluator`` inside ``pathsearch.search``)."""

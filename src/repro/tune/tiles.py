@@ -171,6 +171,18 @@ def search_tile_shapes(g: XGraph, qm, dev: DeviceModel, strategy, *,
     if profile is None and harness is None:
         raise ValueError("search_tile_shapes needs a profile, a harness, "
                          "or both")
+    from repro.obs.trace import TRACER
+    with TRACER.span("tile_search", cat="compile", track="compile"):
+        return _search_tile_shapes(
+            g, qm, dev, strategy, profile=profile, harness=harness,
+            top_k=top_k, passes=passes, max_candidates=max_candidates,
+            min_measurable_s=min_measurable_s)
+
+
+def _search_tile_shapes(g: XGraph, qm, dev: DeviceModel, strategy, *,
+                        profile=None, harness=None, top_k: int = 3,
+                        passes: int | None = None, max_candidates: int = 16,
+                        min_measurable_s: float = 5e-4) -> TileSearchReport:
     prog = lower.lower_strategy(g, strategy, qm)
     units = []
     for item in prog.launches():
