@@ -2,7 +2,8 @@ PY ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test ci test-multidevice dev-deps bench-table3 serve-smoke \
-        tune-smoke bench-tune tile-smoke bench-tile obs-smoke bench-obs
+        tune-smoke bench-tune tile-smoke bench-tile obs-smoke bench-obs \
+        zoo-smoke bench-zoo examples-smoke
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -21,7 +22,8 @@ test:
 # test_multidevice forces 8 host devices in subprocesses, which needs real
 # cores; on throttled 2-core CI boxes it can exceed any sane wall budget, so
 # it gates separately (make test-multidevice).
-ci: dev-deps serve-smoke tune-smoke tile-smoke obs-smoke
+ci: dev-deps serve-smoke tune-smoke tile-smoke obs-smoke zoo-smoke \
+    examples-smoke
 	$(PY) -m pytest -q --ignore=tests/test_multidevice.py
 
 test-multidevice:
@@ -75,3 +77,23 @@ obs-smoke:
 # Full observability benchmark: more requests, default knobs.
 bench-obs:
 	$(PY) benchmarks/obs_bench.py --json obs_bench.json
+
+# Staged-pipeline / model-zoo acceptance (ISSUE 7): compile three nets into
+# a content-addressed zoo, serve a skewed mixed stream co-resident vs
+# swap-per-model, and assert cross-model bit-exactness, co-resident >
+# swapped throughput, and that warm recompiles/zoo reopens build 0 stages
+# (verified via the stage-cache metrics counters).
+zoo-smoke:
+	$(PY) benchmarks/zoo_bench.py --img 32 --requests 24 --smoke \
+	    --json zoo_bench.json
+
+# Full zoo benchmark: more traffic, default knobs.
+bench-zoo:
+	$(PY) benchmarks/zoo_bench.py --requests 96 --json zoo_bench.json
+
+# The README quickstarts must keep running: both examples at small
+# resolution (documentation that executes is documentation that's true).
+examples-smoke:
+	$(PY) examples/quickstart.py
+	$(PY) examples/serve_cnn.py --model vgg16 --img 32 --requests 4 \
+	    --max-batch 2

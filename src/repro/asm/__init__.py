@@ -13,18 +13,22 @@ repeated serving requests reload plans instead of recompiling.
 from repro.asm.artifact import (
     CompiledArtifact,
     PlanCache,
+    PlanResult,
     PLAN_CACHE,
+    assemble_artifact,
     compile_strategy,
     device_of_artifact,
     graph_signature,
     load_artifact,
+    plan_strategy,
     quant_signature,
     save_artifact,
     strategy_signature,
 )
 
 __all__ = [
-    "CompiledArtifact", "PlanCache", "PLAN_CACHE", "compile_strategy",
-    "device_of_artifact", "graph_signature", "load_artifact",
-    "quant_signature", "save_artifact", "strategy_signature",
+    "CompiledArtifact", "PlanCache", "PlanResult", "PLAN_CACHE",
+    "assemble_artifact", "compile_strategy", "device_of_artifact",
+    "graph_signature", "load_artifact", "plan_strategy", "quant_signature",
+    "save_artifact", "strategy_signature",
 ]

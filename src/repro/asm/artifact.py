@@ -224,20 +224,28 @@ class CompiledArtifact:
 
 
 # ----------------------------------------------------------------- compilation
-def compile_strategy(g: XGraph, strategy, dev: DeviceModel,
-                     qm: QuantizedModel | None = None, *,
-                     profile=None, pin_input: bool | None = None
-                     ) -> CompiledArtifact:
-    """Lower ``strategy`` to an addressed, hazard-checked artifact.
+@dataclasses.dataclass
+class PlanResult:
+    """Payload of the ``Planned`` compile stage (see ``repro.stages``): the
+    ordered execution items, their solved tilings, the memory plan, the
+    addressed instruction stream, and the simulator's hazard audit."""
+    items: list                     # ordered groups the instrs were emitted for
+    tilings: list                   # one GroupTiling per item
+    plan: object                    # memory.MemoryPlan
+    instrs: list                    # list[Instr], addressed
+    mem_summary: dict               # peak/no-reuse/reuse-factor/banks
+    sim_total_cycles: int
+    pin_input: bool
 
-    ``profile`` (a ``tune.DeviceProfile``, its hash string, or None) is
-    provenance: the artifact records which calibrated cost model planned it.
-    ``pin_input`` keeps the network input's DDR region out of the planner's
-    reuse pool (see ``memory.plan_memory``)."""
+
+def plan_strategy(g: XGraph, strategy, dev: DeviceModel, *,
+                  pin_input: bool = False) -> PlanResult:
+    """The memory-planning half of compilation: solve every group's tiling
+    (searched shapes win over the analytic Eq. 5/6 defaults), plan DDR +
+    bank layout, emit the addressed instruction stream, and hard-error on
+    any memory hazard the simulator finds."""
     from repro.obs.trace import TRACER
 
-    profile_hash, pin_input = _resolve_provenance(strategy, _profile_hash(
-        profile), pin_input)
     items = order_groups(g, [list(grp) for grp in strategy.groups] +
                          [list(h) for h in strategy.horizontal])
     hset = {tuple(h) for h in strategy.horizontal}
@@ -293,12 +301,22 @@ def compile_strategy(g: XGraph, strategy, dev: DeviceModel,
         instrs = emit_strategy(g, items, tilings, dev, plan=plan)
         sp.set(n_instrs=len(instrs))
     rep = simulator.check(instrs)   # hard-errors on any memory hazard
-    with TRACER.span("lower", cat="compile", track="compile"):
-        program = lower.lower_strategy(g, strategy, qm)
-
     mem_summary = plan.summary()
     mem_summary["banks"] = [
         {"n_in": b.n_banks_in, "n_out": b.n_banks_out} for b in plan.banks]
+    return PlanResult(items=items, tilings=tilings, plan=plan, instrs=instrs,
+                      mem_summary=mem_summary,
+                      sim_total_cycles=rep.total_cycles,
+                      pin_input=bool(pin_input))
+
+
+def assemble_artifact(g: XGraph, strategy, dev: DeviceModel,
+                      qm: QuantizedModel | None, planres: PlanResult,
+                      program: lower.GroupProgram | None, *,
+                      profile_hash: str | None = None,
+                      profile_name: str | None = None) -> CompiledArtifact:
+    """Package a planned + lowered compilation into the DNNVM object file."""
+    tile_shapes = dict(strategy.meta.get("tile_shapes") or {})
     return CompiledArtifact(
         graph_sig=graph_signature(g),
         device=dev.name,
@@ -307,23 +325,52 @@ def compile_strategy(g: XGraph, strategy, dev: DeviceModel,
         meta={"host_nodes": list(strategy.meta.get("host_nodes", [])),
               "graph_name": g.name,
               "profile_hash": profile_hash,
-              "profile_name": (getattr(profile, "name", None)
+              "profile_name": (profile_name
                                or strategy.meta.get("profile_name")),
               # tile provenance: the artifact re-keys identically to the
               # strategy that produced it (strategy_signature hashes these)
               "tile_shapes": {k: list(v) for k, v in tile_shapes.items()},
               "tile_source": strategy.meta.get("tile_source")},
-        exec_items=[list(grp) for grp in items],
-        instrs=instrs,
-        mem_summary=mem_summary,
+        exec_items=[list(grp) for grp in planres.items],
+        instrs=planres.instrs,
+        mem_summary=planres.mem_summary,
         graph_nodes=[{"name": n.name, "op": n.op, "inputs": list(n.inputs),
                       "attrs": _safe_attrs(n.attrs)} for n in g],
         f_a=dict(qm.f_a) if qm else {},
         f_w=dict(qm.f_w) if qm else {},
         weights={k: np.asarray(v) for k, v in qm.weights.items()} if qm else {},
         biases={k: np.asarray(v) for k, v in qm.biases.items()} if qm else {},
-        sim_total_cycles=rep.total_cycles,
+        sim_total_cycles=planres.sim_total_cycles,
         program=program)
+
+
+def compile_strategy(g: XGraph, strategy, dev: DeviceModel,
+                     qm: QuantizedModel | None = None, *,
+                     profile=None, pin_input: bool | None = None
+                     ) -> CompiledArtifact:
+    """Lower ``strategy`` to an addressed, hazard-checked artifact.
+
+    Thin wrapper over the staged compile pipeline (``repro.stages``): the
+    strategy is wrapped, lowered, planned, and compiled in explicit stages —
+    callers that want partial recompiles or stage-level caching should use
+    ``repro.stages`` directly; this entry point preserves the original
+    one-call contract (no stage cache, identical output).
+
+    ``profile`` (a ``tune.DeviceProfile``, its hash string, or None) is
+    provenance: the artifact records which calibrated cost model planned it.
+    ``pin_input`` keeps the network input's DDR region out of the planner's
+    reuse pool (see ``memory.plan_memory``)."""
+    from repro.stages import wrap
+
+    profile_hash, pin_input = _resolve_provenance(strategy, _profile_hash(
+        profile), pin_input)
+    wrapped = wrap(g, qm, dev, cache=None)
+    lowered = wrapped.lower(
+        strategy=strategy,
+        profile=profile if not isinstance(profile, str) else None,
+        profile_hash=profile_hash, cache=None)
+    return lowered.plan(pin_input=pin_input, cache=None) \
+                  .compile(cache=None).artifact
 
 
 # -------------------------------------------------------------- serialization
@@ -418,11 +465,25 @@ class PlanCache:
     long-running server evicts the least-recently-used plan past
     ``maxsize`` instead of growing without bound."""
 
-    def __init__(self, maxsize: int = 64):
+    def __init__(self, maxsize: int = 64, *, max_entries: int | None = None):
         self._store: dict[tuple, CompiledArtifact] = {}
-        self.maxsize = maxsize
+        self.maxsize = max_entries if max_entries is not None else maxsize
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+
+    @property
+    def max_entries(self) -> int:
+        """Bound on resident plans (alias of ``maxsize``; a many-model server
+        sets this through ``Session``/``MultiServer``)."""
+        return self.maxsize
+
+    @max_entries.setter
+    def max_entries(self, n: int) -> None:
+        if n < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.maxsize = n
+        self._shrink()
 
     def key(self, g: XGraph, strategy, dev: DeviceModel,
             qm: QuantizedModel | None = None, *, profile=None,
@@ -466,8 +527,15 @@ class PlanCache:
     def _put(self, k: tuple, art: CompiledArtifact) -> None:
         self._store.pop(k, None)
         self._store[k] = art
+        self._shrink()
+
+    def _shrink(self) -> None:
+        from repro.obs.metrics import REGISTRY
+
         while len(self._store) > self.maxsize:
             self._store.pop(next(iter(self._store)))
+            self.evictions += 1
+            REGISTRY.counter("plan_cache.evictions").inc()
 
     def clear(self) -> None:
         self._store.clear()

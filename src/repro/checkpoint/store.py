@@ -49,6 +49,11 @@ class CheckpointStore:
         self.keep = keep
         os.makedirs(root, exist_ok=True)
         self._thread: threading.Thread | None = None
+        # serializes every directory mutation (write + gc): a synchronous
+        # save must not gc step dirs while a background write is in flight
+        self._io_lock = threading.Lock()
+        # guards the _thread handle so concurrent wait()s are idempotent
+        self._state_lock = threading.Lock()
 
     # ------------------------------------------------------------------ save
     def save(self, state, step: int, async_write: bool = False,
@@ -58,42 +63,54 @@ class CheckpointStore:
         path = os.path.join(self.root, f"step_{step:08d}")
 
         def write():
-            tmp = path + ".tmp"
-            os.makedirs(tmp, exist_ok=True)
-            for i, arr in enumerate(host_leaves):
-                np.save(os.path.join(tmp, f"leaf_{i}_host0.npy"), _encode(arr))
-            index = {
-                "step": step,
-                "n_leaves": len(host_leaves),
-                "treedef": str(treedef),
-                "shapes": [list(a.shape) for a in host_leaves],
-                "dtypes": [str(a.dtype) for a in host_leaves],
-                "n_hosts": 1,
-                "extra": extra or {},
-            }
-            with open(os.path.join(tmp, "index.json"), "w") as f:
-                json.dump(index, f)
-            with open(os.path.join(tmp, "COMMITTED"), "w") as f:
-                f.write("ok")
-            if os.path.exists(path):
-                shutil.rmtree(path)
-            os.replace(tmp, path)
-            self._gc()
+            # one writer at a time: a sync save overlapping an async one
+            # must not interleave directory mutations (or gc — below)
+            with self._io_lock:
+                tmp = path + ".tmp"
+                os.makedirs(tmp, exist_ok=True)
+                for i, arr in enumerate(host_leaves):
+                    np.save(os.path.join(tmp, f"leaf_{i}_host0.npy"),
+                            _encode(arr))
+                index = {
+                    "step": step,
+                    "n_leaves": len(host_leaves),
+                    "treedef": str(treedef),
+                    "shapes": [list(a.shape) for a in host_leaves],
+                    "dtypes": [str(a.dtype) for a in host_leaves],
+                    "n_hosts": 1,
+                    "extra": extra or {},
+                }
+                with open(os.path.join(tmp, "index.json"), "w") as f:
+                    json.dump(index, f)
+                with open(os.path.join(tmp, "COMMITTED"), "w") as f:
+                    f.write("ok")
+                if os.path.exists(path):
+                    shutil.rmtree(path)
+                os.replace(tmp, path)
+                self._gc()
 
         if async_write:
             self.wait()
-            self._thread = threading.Thread(target=write, daemon=True)
-            self._thread.start()
+            with self._state_lock:
+                self._thread = threading.Thread(target=write, daemon=True)
+                self._thread.start()
         else:
             write()
         return path
 
     def wait(self) -> None:
-        if self._thread is not None:
-            self._thread.join()
-            self._thread = None
+        """Block until the outstanding background write (if any) finishes.
+        Idempotent and safe under concurrent callers: the thread handle is
+        claimed under a lock, so every waiter joins (or finds nothing) and
+        a double wait is a no-op."""
+        with self._state_lock:
+            t, self._thread = self._thread, None
+        if t is not None:
+            t.join()
 
     def _gc(self) -> None:
+        # only ever called from write(), under _io_lock: gc never races an
+        # in-flight background write's tmp dir or commit rename
         steps = sorted(self.steps())
         for s in steps[:-self.keep]:
             shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"),

@@ -7,12 +7,12 @@ track), ``metrics`` (bounded counters/gauges/histograms the server keeps),
 and ``drift`` (is the device profile the plan was ranked under still true).
 """
 from repro.obs.metrics import (REGISTRY, Counter, Gauge, Histogram,
-                               MetricsRegistry)
+                               MetricsRegistry, labeled)
 from repro.obs.trace import TRACER, SpanRecord, Tracer, span, traced
 from repro.obs.drift import DriftProfiler, DriftReport, UnitDrift
 
 __all__ = [
     "TRACER", "Tracer", "SpanRecord", "span", "traced",
-    "REGISTRY", "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "REGISTRY", "MetricsRegistry", "Counter", "Gauge", "Histogram", "labeled",
     "DriftProfiler", "DriftReport", "UnitDrift",
 ]

@@ -27,6 +27,17 @@ DEFAULT_LATENCY_BUCKETS_MS = (
 DEFAULT_BATCH_BUCKETS = (1, 2, 4, 8, 16, 32, 64, 128, 256)
 
 
+def labeled(name: str, labels: dict | None) -> str:
+    """Mangle a metric name with sorted key=value labels, Prometheus-style:
+    ``labeled("requests", {"model": "vgg16"}) == 'requests{model=vgg16}'``.
+    Labels must stay low-cardinality — each combination is a distinct metric
+    counted against the registry cap."""
+    if not labels:
+        return name
+    inner = ",".join(f"{k}={labels[k]}" for k in sorted(labels))
+    return f"{name}{{{inner}}}"
+
+
 class Counter:
     """Monotonically increasing count."""
     __slots__ = ("name", "_value", "_lock")
@@ -194,14 +205,17 @@ class MetricsRegistry:
             self._metrics[name] = m
             return m
 
-    def counter(self, name: str) -> Counter:
+    def counter(self, name: str, labels: dict | None = None) -> Counter:
+        name = labeled(name, labels)
         return self._get_or_create(name, Counter, lambda: Counter(name))
 
-    def gauge(self, name: str) -> Gauge:
+    def gauge(self, name: str, labels: dict | None = None) -> Gauge:
+        name = labeled(name, labels)
         return self._get_or_create(name, Gauge, lambda: Gauge(name))
 
-    def histogram(self, name: str,
-                  bounds=DEFAULT_LATENCY_BUCKETS_MS) -> Histogram:
+    def histogram(self, name: str, bounds=DEFAULT_LATENCY_BUCKETS_MS,
+                  labels: dict | None = None) -> Histogram:
+        name = labeled(name, labels)
         return self._get_or_create(name, Histogram,
                                    lambda: Histogram(name, bounds))
 

@@ -10,16 +10,21 @@ host-side layer that feeds the accelerator:
                              knobs; one worker flushes queued images as one
                              batched launch.
 * :class:`Server`          — Session + batcher + latency/batch metrics.
+* :class:`MultiServer`     — many models on one device: DDR partitioning,
+                             per-tenant SLO classes, admission control.
 * :func:`pipeline_report`  — engine-level cross-request schedule: the
                              artifact's addressed instruction stream,
                              software-pipelined across requests on the time
                              wheel and audited by the memory-hazard oracle.
 """
 from repro.runtime.batching import BatcherClosed, DynamicBatcher
+from repro.runtime.multitenant import (SLO_CLASSES, AdmissionError,
+                                       MultiServer)
 from repro.runtime.schedule import (PipelineReport, pipeline_report,
                                     pipeline_stream)
 from repro.runtime.server import Server
 from repro.runtime.session import Session
 
-__all__ = ["BatcherClosed", "DynamicBatcher", "PipelineReport", "Server",
-           "Session", "pipeline_report", "pipeline_stream"]
+__all__ = ["AdmissionError", "BatcherClosed", "DynamicBatcher", "MultiServer",
+           "PipelineReport", "SLO_CLASSES", "Server", "Session",
+           "pipeline_report", "pipeline_stream"]

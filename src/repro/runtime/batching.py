@@ -34,7 +34,8 @@ class BatcherClosed(RuntimeError):
 class DynamicBatcher:
     def __init__(self, run_batch, *, max_batch: int = 8,
                  max_latency_s: float = 2e-3, clock=time.monotonic,
-                 latency_window: int = 16384, registry=None, tracer=None):
+                 latency_window: int = 16384, registry=None, tracer=None,
+                 labels: dict | None = None):
         """``run_batch(xs) -> list[result]`` executes one batch (one result
         per request, same order).  ``latency_window`` bounds the retained
         latency samples (a long-running server must not grow without bound).
@@ -44,7 +45,9 @@ class DynamicBatcher:
         ``execute_s`` (batch formed -> results back, per batch) so an SLO
         controller can tell a queue-bound p99 violation from a launch-bound
         one.  When the shared tracer is enabled, each request gets a
-        queue-wait + execute track and each batch a batch-track span."""
+        queue-wait + execute track and each batch a batch-track span.
+        ``labels`` tags every emitted metric (multi-tenant serving labels
+        per-model: ``serve.requests{model=vgg16}``)."""
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self._run_batch = run_batch
@@ -73,15 +76,20 @@ class DynamicBatcher:
         self._registry = (registry if registry is not None
                           else obs_metrics.REGISTRY)
         self._tracer = tracer if tracer is not None else obs_trace.TRACER
-        self._m_requests = self._registry.counter("serve.requests")
-        self._m_batches = self._registry.counter("serve.batches")
-        self._m_errors = self._registry.counter("serve.errors")
-        self._m_depth = self._registry.gauge("serve.queue_depth")
+        self.labels = dict(labels) if labels else None
+        self._m_requests = self._registry.counter("serve.requests", self.labels)
+        self._m_batches = self._registry.counter("serve.batches", self.labels)
+        self._m_errors = self._registry.counter("serve.errors", self.labels)
+        self._m_depth = self._registry.gauge("serve.queue_depth", self.labels)
         self._m_batch = self._registry.histogram("serve.batch_size",
-                                                 DEFAULT_BATCH_BUCKETS)
-        self._m_latency = self._registry.histogram("serve.latency_ms")
-        self._m_wait = self._registry.histogram("serve.queue_wait_ms")
-        self._m_exec = self._registry.histogram("serve.execute_ms")
+                                                 DEFAULT_BATCH_BUCKETS,
+                                                 labels=self.labels)
+        self._m_latency = self._registry.histogram("serve.latency_ms",
+                                                   labels=self.labels)
+        self._m_wait = self._registry.histogram("serve.queue_wait_ms",
+                                                labels=self.labels)
+        self._m_exec = self._registry.histogram("serve.execute_ms",
+                                                labels=self.labels)
         self._worker = threading.Thread(target=self._loop, daemon=True,
                                         name="dnnvm-batcher")
         self._worker.start()

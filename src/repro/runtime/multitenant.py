@@ -1,0 +1,187 @@
+"""Multi-tenant serving: many compiled models, one device, one front door.
+
+The zoo makes artifacts cheap to hold; this module makes them cheap to
+*serve together*.  A :class:`MultiServer` routes per-model request streams to
+per-model :class:`~repro.runtime.session.Session`/:class:`~repro.runtime.
+server.Server` pairs that share one device:
+
+* **DDR partitioning** — every resident model's memory plan claims a
+  disjoint DDR region (base offset + its planned ``peak_ddr_bytes``);
+  ``add_model`` refuses a model whose footprint would overflow the device's
+  (or a configured) budget, so co-residency is checked at admission time,
+  not discovered as corruption at run time;
+* **per-tenant SLO classes** — ``slo="gold" | "silver" | "best_effort"``
+  maps to a target p99 per Server; the PR-6 SLO controller then walks each
+  tenant's batch cap independently, and its queue-bound vs launch-bound
+  shrink split tells an operator *which* tenant needs smaller batches vs
+  more capacity;
+* **admission control** — beyond ``max_queue`` pending requests a tenant's
+  ``submit`` raises :class:`AdmissionError` instead of queueing (counted
+  under ``serve.rejected{model=...}``): under overload the backlog is
+  bounded and the SLO classes stay meaningful.
+
+All per-model metrics are labelled (``serve.requests{model=vgg16}``), so one
+registry snapshot shows every tenant side by side.
+"""
+from __future__ import annotations
+
+
+class AdmissionError(RuntimeError):
+    """submit() refused: the tenant's queue is at its admission bound."""
+
+
+# SLO class -> target p99 (ms) handed to the per-tenant Server controller.
+# best_effort runs uncontrolled (no target: largest batches, no shrink).
+SLO_CLASSES = {"gold": 10.0, "silver": 50.0, "best_effort": None}
+
+
+class MultiServer:
+    """Serve several compiled models on one shared device."""
+
+    def __init__(self, *, ddr_budget_bytes: int | None = None,
+                 max_queue: int = 256, slo_classes: dict | None = None,
+                 plan_cache_max_entries: int | None = None):
+        """``ddr_budget_bytes`` caps the summed planned footprints of all
+        resident models (default: the shared device's ``ddr_bytes``).
+        ``max_queue`` is the default per-tenant admission bound.
+        ``plan_cache_max_entries`` rebounds the shared ``asm.PLAN_CACHE`` —
+        a many-model host sets it to cap resident compiled artifacts."""
+        from repro.obs.metrics import REGISTRY
+
+        self.ddr_budget_bytes = ddr_budget_bytes
+        self.max_queue = max_queue
+        self.slo_classes = dict(SLO_CLASSES)
+        if slo_classes:
+            self.slo_classes.update(slo_classes)
+        self._models: dict[str, dict] = {}
+        self._device = None             # pinned by the first add_model
+        self._registry = REGISTRY
+        if plan_cache_max_entries is not None:
+            from repro import asm
+            asm.PLAN_CACHE.max_entries = plan_cache_max_entries
+
+    # ---------------------------------------------------------------- models
+    def _as_session(self, model, backend, session_kw):
+        """Accept a stages.Compiled, a CompiledArtifact, or a live Session."""
+        from repro.asm.artifact import CompiledArtifact
+        from repro.runtime.session import Session
+
+        if isinstance(model, Session):
+            return model
+        if isinstance(model, CompiledArtifact):
+            return Session.from_artifact(model, backend=backend, **session_kw)
+        art = getattr(model, "artifact", None)      # stages.Compiled
+        if isinstance(art, CompiledArtifact):
+            return Session.from_artifact(art, backend=backend, **session_kw)
+        raise TypeError(f"cannot serve {type(model).__name__}; expected a "
+                        "Session, CompiledArtifact, or stages.Compiled")
+
+    def add_model(self, name: str, model, *, slo: str = "best_effort",
+                  target_p99_ms: float | None = None,
+                  max_queue: int | None = None, backend: str = "ref",
+                  session_kw: dict | None = None, **server_kw):
+        """Admit one model under ``name`` and start serving it.
+
+        ``slo`` picks the tenant's SLO class (an explicit ``target_p99_ms``
+        overrides the class target).  Raises :class:`MemoryError` when the
+        model's planned DDR footprint does not fit the remaining partition
+        budget, and ``ValueError`` on name/device conflicts."""
+        if name in self._models:
+            raise ValueError(f"model {name!r} already registered")
+        if slo not in self.slo_classes:
+            raise ValueError(f"unknown SLO class {slo!r}; have "
+                             f"{sorted(self.slo_classes)}")
+        session = self._as_session(model, backend, session_kw or {})
+        if self._device is None:
+            self._device = session.device
+        elif session.device.name != self._device.name:
+            raise ValueError(
+                f"model {name!r} targets device {session.device.name!r} but "
+                f"this server hosts {self._device.name!r}")
+
+        budget = self.ddr_budget_bytes or self._device.ddr_bytes
+        used = sum(m["ddr_bytes"] for m in self._models.values())
+        need = int(session.artifact.peak_ddr_bytes)
+        if used + need > budget:
+            raise MemoryError(
+                f"model {name!r} needs {need} B of DDR but only "
+                f"{budget - used} of {budget} B remain "
+                f"({len(self._models)} resident models)")
+
+        if target_p99_ms is None:
+            target_p99_ms = self.slo_classes[slo]
+        server = session.serve(target_p99_ms=target_p99_ms,
+                               labels={"model": name}, **server_kw)
+        self._models[name] = {
+            "session": session, "server": server, "slo": slo,
+            "ddr_base": used, "ddr_bytes": need,
+            "max_queue": max_queue if max_queue is not None
+            else self.max_queue,
+        }
+        return server
+
+    def remove_model(self, name: str, wait: bool = True) -> None:
+        m = self._models.pop(name)
+        m["server"].close(wait=wait)
+        # re-pack the partition: survivors keep their order, bases close up
+        base = 0
+        for m in self._models.values():
+            m["ddr_base"] = base
+            base += m["ddr_bytes"]
+
+    def models(self) -> list[str]:
+        return list(self._models)
+
+    # ---------------------------------------------------------------- client
+    def submit(self, name: str, x):
+        """Enqueue one request for tenant ``name``; returns a future.
+
+        Raises :class:`AdmissionError` (and counts it) when the tenant's
+        queue is at its admission bound — overload sheds load here instead
+        of letting one hot model starve every SLO."""
+        m = self._models[name]
+        if m["server"]._batcher.pending >= m["max_queue"]:
+            self._registry.counter("serve.rejected",
+                                   {"model": name}).inc()
+            raise AdmissionError(
+                f"model {name!r} queue at admission bound "
+                f"({m['max_queue']} pending)")
+        return m["server"].submit(x)
+
+    # --------------------------------------------------------------- reports
+    def ddr_partition(self) -> list[dict]:
+        """The device-DDR carve-up: one disjoint [base, base+bytes) region
+        per resident model, in admission order."""
+        return [{"model": name, "base": m["ddr_base"],
+                 "bytes": m["ddr_bytes"], "slo": m["slo"]}
+                for name, m in self._models.items()]
+
+    def stats(self) -> dict:
+        budget = (self.ddr_budget_bytes
+                  or (self._device.ddr_bytes if self._device else 0))
+        rejected = {
+            name: (self._registry.get(
+                f"serve.rejected{{model={name}}}").value
+                if self._registry.get(f"serve.rejected{{model={name}}}")
+                else 0.0)
+            for name in self._models}
+        return {
+            "models": {name: m["server"].stats()
+                       for name, m in self._models.items()},
+            "slo": {name: m["slo"] for name, m in self._models.items()},
+            "rejected": rejected,
+            "ddr_partition": self.ddr_partition(),
+            "ddr_budget_bytes": budget,
+            "ddr_used_bytes": sum(m["ddr_bytes"]
+                                  for m in self._models.values()),
+        }
+
+    def close(self, wait: bool = True) -> None:
+        for m in self._models.values():
+            m["server"].close(wait=wait)
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()

@@ -25,14 +25,15 @@ class Server:
     def __init__(self, session, *, max_batch: int = 8,
                  max_latency_s: float = 2e-3, allowed_sizes=None,
                  warmup: bool = True, target_p99_ms: float | None = None,
-                 slo_window: int = 64):
+                 slo_window: int = 64, labels: dict | None = None):
         """``target_p99_ms`` turns on latency-SLO-aware batch sizing: the
         server watches the p99 of the batcher's bounded latency window
         (last ``slo_window`` submit->result samples) and walks the effective
         max batch down the allowed-size ladder while the SLO is violated —
         a smaller cap both shortens the batch-forming wait and the batched
         launch itself — then back up once p99 clears the target with margin.
-        ``max_batch`` stays the hard ceiling."""
+        ``max_batch`` stays the hard ceiling.  ``labels`` tags every metric
+        this server emits (multi-tenant hosts label per-model)."""
         from repro.runtime.batching import DynamicBatcher
 
         self.session = session
@@ -54,10 +55,12 @@ class Server:
         self.slo_shrinks_launch_bound = 0
         from repro.obs import metrics as obs_metrics
         self._registry = obs_metrics.REGISTRY
+        self.labels = dict(labels) if labels else None
         if warmup:
             self._warmup()
         self._batcher = DynamicBatcher(self._run, max_batch=max_batch,
-                                       max_latency_s=max_latency_s)
+                                       max_latency_s=max_latency_s,
+                                       labels=self.labels)
 
     def _warmup(self) -> None:
         """Trace every allowed batch shape once so steady-state serving never
@@ -135,7 +138,8 @@ class Server:
                     self.slo_shrinks_queue_bound += 1
                 else:
                     self.slo_shrinks_launch_bound += 1
-                self._registry.counter(f"serve.slo_shrink.{cause}_bound").inc()
+                self._registry.counter(f"serve.slo_shrink.{cause}_bound",
+                                       self.labels).inc()
         elif p99 < 0.5 * self.target_p99_ms and cur < self.max_batch:
             bigger = [s for s in self.allowed_sizes
                       if cur < s <= self.max_batch]
@@ -143,7 +147,7 @@ class Server:
                 self._batcher.set_max_batch(bigger[0])
                 self._slo_mark = self._batcher.n_served
                 self.slo_grows += 1
-                self._registry.counter("serve.slo_grow").inc()
+                self._registry.counter("serve.slo_grow", self.labels).inc()
 
     # ---------------------------------------------------------------- client
     def submit(self, x):

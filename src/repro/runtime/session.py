@@ -35,17 +35,22 @@ class Session:
 
     def __init__(self, g, strategy, dev, qm, *, backend: str = "ref",
                  cache=None, interpret: bool = True, profile=None,
-                 pin_input: bool | None = None):
+                 pin_input: bool | None = None,
+                 cache_max_entries: int | None = None):
         """``profile`` names the calibrated device profile to compile under —
         a ``tune.DeviceProfile``, a profile name/path resolved through the
         on-disk ``tune.ProfileCache``, or None (the analytic model; a
         strategy picked by a profile-guided search still keys by the profile
-        hash it carries).  ``pin_input`` forwards to the memory planner."""
+        hash it carries).  ``pin_input`` forwards to the memory planner.
+        ``cache_max_entries`` rebounds the plan cache this session compiles
+        through (a multi-model host sets it once to cap resident artifacts)."""
         from repro import asm
         from repro.core.executor import Int8Executor
 
         self.profile = _resolve_profile(profile)
         self.cache = cache if cache is not None else asm.PLAN_CACHE
+        if cache_max_entries is not None:
+            self.cache.max_entries = cache_max_entries
         self.artifact, self.cache_hit = self.cache.get_or_compile(
             g, strategy, dev, qm=qm, profile=self.profile,
             pin_input=pin_input)
@@ -60,7 +65,8 @@ class Session:
 
     @classmethod
     def from_artifact(cls, art, *, backend: str = "ref", cache=None,
-                      interpret: bool = True, profile=None) -> "Session":
+                      interpret: bool = True, profile=None,
+                      cache_max_entries: int | None = None) -> "Session":
         """Open a session on a loaded DNNVM object file — no recompilation:
         the artifact is seeded into the plan cache under its own key.
 
@@ -94,7 +100,8 @@ class Session:
         # pipeline_report and the session-side profile_hash provenance
         cache.put(g, art, dev, art, qm=qm, profile=resolved)
         return cls(g, art, dev, qm, backend=backend, cache=cache,
-                   interpret=interpret, profile=resolved)
+                   interpret=interpret, profile=resolved,
+                   cache_max_entries=cache_max_entries)
 
     # ------------------------------------------------------------- execution
     def _stack(self, xs, pad_to: int | None = None):

@@ -27,7 +27,8 @@ from repro.tune.measure import Measurement, MeasurementHarness, time_callable
 from repro.tune.profile import (DeviceProfile, ProfileCache, load_profile,
                                 resolve_profile, save_profile)
 from repro.tune.tiles import (TileSearchReport, predict_best_shape,
-                              search_tile_shapes, shape_candidates)
+                              search_tile_shapes, shape_candidates,
+                              tune_lowered)
 
 __all__ = [
     "CalibrationResult", "calibrate", "fit_profile",
@@ -36,5 +37,5 @@ __all__ = [
     "DeviceProfile", "ProfileCache", "load_profile", "save_profile",
     "resolve_profile",
     "TileSearchReport", "predict_best_shape", "search_tile_shapes",
-    "shape_candidates",
+    "shape_candidates", "tune_lowered",
 ]

@@ -277,3 +277,32 @@ def _search_tile_shapes(g: XGraph, qm, dev: DeviceModel, strategy, *,
     strategy.meta["tile_source"] = source
     strategy.meta["tile_provenance"] = provenance
     return report
+
+
+def tune_lowered(lowered, *, profile=None, harness=None, cache=None,
+                 **search_kw):
+    """Re-run the tile-shape search over an existing ``stages.Lowered`` and
+    return a new ``Lowered`` carrying the tuned shapes.
+
+    This is the staged pipeline's partial-recompile path: pathsearch is NOT
+    re-run — the searched group partition is kept, only the per-launch tile
+    shapes move.  The input stage is never mutated (its strategy is copied
+    before the search writes ``meta['tile_shapes']``), so the untuned and
+    tuned lowerings coexist in the stage cache under their own content
+    hashes, and downstream ``plan``/``compile`` re-run only for the tuned
+    branch.
+    """
+    import copy
+
+    from repro.tune.profile import resolve_profile
+
+    resolved = resolve_profile(profile) if profile is not None \
+        else lowered.profile
+    w = lowered.wrapped
+    strat = copy.copy(lowered.strategy)
+    strat.meta = dict(lowered.strategy.meta)
+    search_tile_shapes(w.graph, w.qm, w.device, strat,
+                       profile=resolved, harness=harness, **search_kw)
+    ph = resolved.hash() if resolved is not None else lowered.profile_hash
+    return w.lower(strategy=strat, profile=resolved, profile_hash=ph,
+                   cache=cache)

@@ -1,0 +1,4 @@
+"""Content-addressed on-disk store of compiled model artifacts."""
+from repro.zoo.store import ModelZoo
+
+__all__ = ["ModelZoo"]

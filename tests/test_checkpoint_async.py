@@ -1,0 +1,87 @@
+"""CheckpointStore async-write lifecycle regressions (ISSUE 7 satellite):
+gc must never run concurrently with an in-flight background write, and
+``wait()`` must be idempotent and safe under concurrent callers."""
+import threading
+
+import jax
+import numpy as np
+
+import repro.checkpoint.store as store_mod
+from repro.checkpoint.store import CheckpointStore
+
+STATE = {"w": np.arange(16, dtype=np.float32), "b": np.ones(4, np.float32)}
+
+
+def test_wait_is_idempotent_and_concurrent_safe(tmp_path):
+    store = CheckpointStore(str(tmp_path))
+    store.save(STATE, step=1, async_write=True)
+    errors = []
+
+    def waiter():
+        try:
+            store.wait()
+        except Exception as e:          # pragma: no cover - the regression
+            errors.append(e)
+
+    threads = [threading.Thread(target=waiter) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    store.wait()                         # double wait: no-op, no error
+    store.wait()
+    assert store.steps() == [1]
+
+
+def test_sync_save_and_gc_serialized_behind_inflight_async_write(
+        tmp_path, monkeypatch):
+    """While a background write is mid-flight, a synchronous save (whose
+    ``_gc`` deletes old step dirs) must block until the async write commits
+    — interleaving used to let gc race the writer's tmp dir."""
+    store = CheckpointStore(str(tmp_path), keep=1)
+    gate = threading.Event()
+    entered = threading.Event()
+    orig = store_mod._encode
+    state = {"calls": 0}
+
+    def gated_encode(arr):
+        # stall only the FIRST leaf of the first (async) write
+        state["calls"] += 1
+        if state["calls"] == 1:
+            entered.set()
+            assert gate.wait(timeout=10)
+        return orig(arr)
+
+    monkeypatch.setattr(store_mod, "_encode", gated_encode)
+    store.save(STATE, step=1, async_write=True)
+    assert entered.wait(timeout=10)      # async writer is now mid-write
+
+    done = threading.Event()
+
+    def sync_save():
+        store.save(STATE, step=2)        # runs write()+_gc() inline
+        done.set()
+
+    t = threading.Thread(target=sync_save)
+    t.start()
+    # the sync save must NOT complete while the async write holds the lock
+    assert not done.wait(timeout=0.3)
+    gate.set()
+    assert done.wait(timeout=10)
+    t.join()
+    store.wait()
+    # both writes landed in order; gc (keep=1) then kept only the newest
+    assert store.steps() == [2]
+    restored, step = store.restore_latest(
+        jax.eval_shape(lambda: STATE))
+    assert step == 2
+    np.testing.assert_array_equal(restored["w"], STATE["w"])
+
+
+def test_async_writes_back_to_back_commit_all(tmp_path):
+    store = CheckpointStore(str(tmp_path), keep=3)
+    for s in (1, 2, 3, 4):
+        store.save(STATE, step=s, async_write=True)
+    store.wait()
+    assert store.steps() == [2, 3, 4]

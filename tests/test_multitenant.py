@@ -1,0 +1,142 @@
+"""Multi-tenant serving: routing bit-exactness, DDR partitioning, admission
+control, and the bounded shared plan cache (ISSUE 7 satellites)."""
+import numpy as np
+import pytest
+
+from repro import asm
+from repro.core import executor, pathsearch, quantize
+from repro.hw import ZU2
+from repro.obs.metrics import REGISTRY
+from repro.runtime import AdmissionError, MultiServer, Session
+from tests.conftest import make_toy_resnet_graph, toy_params
+
+
+def _model(seed, cache=None):
+    """One compiled toy model; ``seed`` differentiates the weights."""
+    g = make_toy_resnet_graph()
+    params = toy_params(g, seed=seed)
+    x = np.random.default_rng(seed).standard_normal(
+        g.shape("data")).astype(np.float32)
+    qm = quantize.calibrate(g, params, x, executor.run_float)
+    s = pathsearch.search(g, ZU2)
+    return Session(g, s, ZU2, qm,
+                   cache=cache if cache is not None else asm.PlanCache())
+
+
+@pytest.fixture(scope="module")
+def two_models():
+    return _model(0), _model(1)
+
+
+# ----------------------------------------------------------------- routing
+def test_routing_is_bit_exact_per_tenant(two_models):
+    """Interleaved streams for two co-resident models must produce exactly
+    what each model's own session produces in isolation."""
+    sa, sb = two_models
+    g = sa.graph
+    rng = np.random.default_rng(3)
+    xs = rng.integers(-128, 127, (6,) + tuple(g.shape("data")[1:]), np.int8)
+    with MultiServer() as ms:
+        ms.add_model("a", sa, slo="gold", max_latency_s=1e-4, warmup=False)
+        ms.add_model("b", sb, slo="silver", max_latency_s=1e-4, warmup=False)
+        futs = [(name, x, ms.submit(name, x))
+                for x in xs for name in ("a", "b")]
+        for name, x, fut in futs:
+            want = (sa if name == "a" else sb).run(x)
+            got = fut.result(timeout=30)
+            for k in want:
+                np.testing.assert_array_equal(got[k], want[k])
+    st = ms.stats()
+    assert st["models"]["a"]["n_served"] == len(xs)
+    assert st["models"]["b"]["n_served"] == len(xs)
+    assert st["slo"] == {"a": "gold", "b": "silver"}
+
+
+# ---------------------------------------------------------- DDR partitioning
+def test_ddr_partition_is_disjoint_and_bounded(two_models):
+    sa, sb = two_models
+    with MultiServer() as ms:
+        ms.add_model("a", sa, warmup=False)
+        ms.add_model("b", sb, warmup=False)
+        parts = ms.ddr_partition()
+    assert parts[0]["base"] == 0
+    assert parts[1]["base"] == parts[0]["bytes"]       # disjoint regions
+    used = sum(p["bytes"] for p in parts)
+    assert used <= ZU2.ddr_bytes
+    assert ms.stats()["ddr_used_bytes"] == used
+
+
+def test_add_model_refused_when_ddr_budget_exhausted(two_models):
+    sa, sb = two_models
+    budget = int(sa.artifact.peak_ddr_bytes * 1.5)     # fits one, not two
+    with MultiServer(ddr_budget_bytes=budget) as ms:
+        ms.add_model("a", sa, warmup=False)
+        with pytest.raises(MemoryError, match="DDR"):
+            ms.add_model("b", sb, warmup=False)
+        assert ms.models() == ["a"]
+        # removing the resident model frees its region
+        ms.remove_model("a")
+        ms.add_model("b", sb, warmup=False)
+        assert ms.ddr_partition()[0]["base"] == 0
+
+
+def test_device_and_name_conflicts_rejected(two_models):
+    sa, _ = two_models
+    with MultiServer() as ms:
+        ms.add_model("a", sa, warmup=False)
+        with pytest.raises(ValueError, match="already registered"):
+            ms.add_model("a", sa, warmup=False)
+        with pytest.raises(ValueError, match="unknown SLO"):
+            ms.add_model("c", sa, slo="platinum", warmup=False)
+
+
+# --------------------------------------------------------- admission control
+def test_admission_control_sheds_load(two_models):
+    sa, _ = two_models
+    g = sa.graph
+    x = np.zeros(tuple(g.shape("data")[1:]), np.int8)
+    with MultiServer() as ms:
+        ms.add_model("a", sa, max_queue=0, warmup=False)
+        with pytest.raises(AdmissionError):
+            ms.submit("a", x)
+    assert REGISTRY.get("serve.rejected{model=a}").value >= 1.0
+
+
+# -------------------------------------------------- bounded shared plan cache
+def test_plan_cache_lru_eviction_across_three_models():
+    """A shared plan cache bounded to 2 entries serving 3 models must evict
+    LRU artifacts and count the evictions into the metrics registry."""
+    before = (REGISTRY.get("plan_cache.evictions").value
+              if REGISTRY.get("plan_cache.evictions") else 0.0)
+    cache = asm.PlanCache(max_entries=2)
+    sessions = [_model(seed, cache=cache) for seed in (0, 1, 2)]
+    assert len(cache) == 2
+    assert cache.evictions == 1
+    assert REGISTRY.get("plan_cache.evictions").value == before + 1
+    # model 0 was evicted (LRU): rebuilding it is a miss; model 2 is a hit
+    s2 = Session(sessions[2].graph, sessions[2].artifact, ZU2,
+                 sessions[2].qm, cache=cache)
+    assert s2.cache_hit
+    misses = cache.misses
+    s0 = Session(sessions[0].graph, sessions[0].artifact, ZU2,
+                 sessions[0].qm, cache=cache)
+    assert not s0.cache_hit and cache.misses == misses + 1
+
+
+def test_session_exposes_cache_max_entries():
+    cache = asm.PlanCache()
+    s = _model(0)
+    sess = Session(s.graph, s.artifact, ZU2, s.qm, cache=cache,
+                   cache_max_entries=3)
+    assert cache.max_entries == 3
+    with pytest.raises(ValueError):
+        cache.max_entries = 0
+
+
+def test_multiserver_rebounds_shared_plan_cache():
+    old = asm.PLAN_CACHE.max_entries
+    try:
+        MultiServer(plan_cache_max_entries=5)
+        assert asm.PLAN_CACHE.max_entries == 5
+    finally:
+        asm.PLAN_CACHE.max_entries = old

@@ -1,0 +1,110 @@
+"""Content-addressed model zoo: round trips, source-indexed reopen through
+``compile_model``, LRU eviction, and sidecar robustness."""
+import os
+
+import numpy as np
+import pytest
+
+from repro import asm
+from repro.core import executor, pathsearch, quantize
+from repro.hw import ZU2
+from repro.obs.metrics import MetricsRegistry
+from repro.stages import StageCache, compile_model
+from repro.zoo import ModelZoo
+from tests.conftest import make_toy_resnet_graph, toy_params
+
+
+@pytest.fixture(scope="module")
+def toy():
+    g = make_toy_resnet_graph()
+    params = toy_params(g)
+    x = np.random.default_rng(0).standard_normal(
+        g.shape("data")).astype(np.float32)
+    qm = quantize.calibrate(g, params, x, executor.run_float)
+    return g, qm
+
+
+@pytest.fixture(scope="module")
+def toy_artifacts(toy):
+    """Three distinct artifacts of the same net (different strategies)."""
+    g, qm = toy
+    return g, qm, [asm.compile_strategy(g, s, ZU2, qm=qm)
+                   for s in (pathsearch.search(g, ZU2),
+                             pathsearch.greedy(g, ZU2),
+                             pathsearch.naive(g, ZU2))]
+
+
+def test_put_get_open_round_trip(toy_artifacts, tmp_path):
+    g, qm, (art, *_) = toy_artifacts
+    zoo = ModelZoo(str(tmp_path / "zoo"))
+    key = zoo.put(art, name="toy")
+    assert zoo.key_for(art) == key
+    art2 = zoo.get(key)
+    assert asm.strategy_signature(art2) == asm.strategy_signature(art)
+    assert art2.instrs == art.instrs
+    co = zoo.open(key)
+    assert co.key == key
+    [rec] = zoo.list()
+    assert rec["name"] == "toy" and rec["key"] == key
+    assert rec["size_bytes"] == os.path.getsize(
+        os.path.join(zoo.root, key + ".npz"))
+    # idempotent re-put: same key, still one entry
+    assert zoo.put(art) == key and len(zoo) == 1
+
+
+def test_compile_model_reopens_from_zoo_without_compiling(toy, tmp_path):
+    """Cold call compiles and shelves; a fresh process-equivalent (empty
+    stage cache) reopens from the zoo and builds ZERO stages past wrap."""
+    g, qm = toy
+    zoo = ModelZoo(str(tmp_path / "zoo"))
+    co1 = compile_model(g, qm, ZU2, zoo=zoo, name="toy",
+                        cache=StageCache(registry=MetricsRegistry()))
+    assert len(zoo) == 1
+    reg = MetricsRegistry()
+    co2 = compile_model(g, qm, ZU2, zoo=zoo,
+                        cache=StageCache(registry=reg))
+    assert co2.key == co1.key
+    assert co2.stage_keys == co1.stage_keys
+    for stage in ("lowered", "planned", "compiled"):
+        assert reg.get(f"stages.{stage}.misses") is None   # never built
+    # bit-exact across the reopen
+    x = np.random.default_rng(2).integers(-128, 127,
+                                          g.shape("data"), np.int8)
+    got, want = co2.session().run(x), co1.session().run(x)
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+
+
+def test_zoo_lru_eviction_and_counters(toy_artifacts, tmp_path):
+    g, qm, arts = toy_artifacts
+    from repro.obs.metrics import REGISTRY
+    zoo = ModelZoo(str(tmp_path / "zoo"), max_entries=2)
+    keys = [zoo.put(a) for a in arts[:2]]
+    zoo.get(keys[0])                     # refresh: keys[1] becomes LRU
+    before = (REGISTRY.get("zoo.evictions").value
+              if REGISTRY.get("zoo.evictions") else 0.0)
+    k3 = zoo.put(arts[2])                # over capacity: evicts keys[1]
+    assert len(zoo) == 2
+    assert zoo.get(keys[1]) is None
+    assert zoo.get(keys[0]) is not None and zoo.get(k3) is not None
+    assert REGISTRY.get("zoo.evictions").value == before + 1
+
+
+def test_zoo_max_bytes_bound(toy_artifacts, tmp_path):
+    g, qm, arts = toy_artifacts
+    zoo = ModelZoo(str(tmp_path / "zoo"))
+    k1 = zoo.put(arts[0])
+    size = zoo.list()[0]["size_bytes"]
+    zoo.max_bytes = size + size // 2     # room for one entry only
+    zoo.put(arts[1])
+    assert len(zoo) == 1 and zoo.get(k1) is None
+
+
+def test_zoo_tolerates_corrupt_sidecar(toy_artifacts, tmp_path):
+    g, qm, (art, *_) = toy_artifacts
+    zoo = ModelZoo(str(tmp_path / "zoo"))
+    key = zoo.put(art)
+    with open(os.path.join(zoo.root, key + ".json"), "w") as f:
+        f.write("{not json")
+    assert zoo.list() == []              # skipped, not crashed
+    assert zoo.get(key) is not None      # the npz itself is still readable
