@@ -65,11 +65,17 @@ tile-smoke:
 bench-tile:
 	$(PY) benchmarks/tile_bench.py --json tile_bench.json
 
-# Observability acceptance (ISSUE 6): serve vgg16@32 with the span tracer +
-# sampling drift profiler on; assert the exported trace is valid Perfetto
-# JSON carrying compile/serve/modeled tracks, the metrics snapshot is
-# complete, the drift band is finite, and traced throughput is within 10% of
-# untraced.  Trace + JSON land in benchmarks/out/ (CI build artifacts).
+# Observability acceptance (ISSUE 6 + 8): serve vgg16@32 with the span
+# tracer + sampling drift profiler on; assert the exported trace is valid
+# Perfetto JSON carrying compile/serve/modeled tracks, the metrics snapshot
+# is complete, the drift band is finite, and traced throughput is within 10%
+# of untraced.  Then serve the same model through the full production plane
+# (OpenMetrics endpoint scraped mid-run and strict-parsed, flight recorder,
+# event log, per-tenant burn-rate trackers, drift gauges) within 5% of
+# traced throughput, and induce one gold-SLO violation — asserting the
+# burn-rate alert fires and a slo_violation flight dump lands on disk.
+# Trace, bench JSON, forensic flight dumps, and the events JSONL all land
+# in benchmarks/out/ (CI build artifacts).
 obs-smoke:
 	$(PY) benchmarks/obs_bench.py --model vgg16 --img 32 --requests 24 \
 	    --smoke --trace obs_trace.json --json obs_bench.json

@@ -530,12 +530,21 @@ class PlanCache:
         self._shrink()
 
     def _shrink(self) -> None:
+        from repro.obs.events import EVENTS
         from repro.obs.metrics import REGISTRY
 
+        dropped = 0
         while len(self._store) > self.maxsize:
             self._store.pop(next(iter(self._store)))
             self.evictions += 1
+            dropped += 1
             REGISTRY.counter("plan_cache.evictions").inc()
+        if dropped:
+            EVENTS.emit("cache.evict", cache="plan_cache", n=dropped,
+                        resident=len(self._store), bound=self.maxsize,
+                        message=f"plan cache evicted {dropped} artifact"
+                                f"{'' if dropped == 1 else 's'} "
+                                f"(bound {self.maxsize})")
 
     def clear(self) -> None:
         self._store.clear()

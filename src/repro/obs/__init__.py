@@ -1,18 +1,35 @@
-"""Observability layer: tracing, metrics, and modeled-vs-measured drift.
+"""Observability layer: tracing, metrics, drift — and the production plane.
 
-The three pieces the paper's validation environment implies but never shows:
-``trace`` (where did the milliseconds go — Perfetto-exportable spans across
-compile and serve, with the simulator's modeled engine timeline as a parallel
-track), ``metrics`` (bounded counters/gauges/histograms the server keeps),
-and ``drift`` (is the device profile the plan was ranked under still true).
+The three in-process pieces the paper's validation environment implies but
+never shows: ``trace`` (where did the milliseconds go — Perfetto-exportable
+spans across compile and serve, with the simulator's modeled engine timeline
+as a parallel track), ``metrics`` (bounded counters/gauges/histograms the
+server keeps), and ``drift`` (is the device profile the plan was ranked
+under still true).  On top of them, the exportable plane a fleet router or a
+continuous-autotuning loop consumes live: ``export`` (OpenMetrics text
+exposition + HTTP scrape endpoint), ``events`` (structured severity-levelled
+JSONL event log, trace-correlated), ``flight`` (bounded per-request flight
+recorder with forensic auto-dumps), and ``slo`` (per-tenant error-budget
+burn-rate tracking with fast/slow-window alerting).
 """
 from repro.obs.metrics import (REGISTRY, Counter, Gauge, Histogram,
-                               MetricsRegistry, labeled)
+                               MetricsRegistry, labeled, parse_labels)
 from repro.obs.trace import TRACER, SpanRecord, Tracer, span, traced
 from repro.obs.drift import DriftProfiler, DriftReport, UnitDrift
+from repro.obs.events import EVENTS, Event, EventLog
+from repro.obs.export import (ObsHTTPServer, OpenMetricsError, find_samples,
+                              parse_openmetrics, render_openmetrics)
+from repro.obs.flight import FlightRecord, FlightRecorder
+from repro.obs.slo import BurnRateTracker
 
 __all__ = [
     "TRACER", "Tracer", "SpanRecord", "span", "traced",
-    "REGISTRY", "MetricsRegistry", "Counter", "Gauge", "Histogram", "labeled",
+    "REGISTRY", "MetricsRegistry", "Counter", "Gauge", "Histogram",
+    "labeled", "parse_labels",
     "DriftProfiler", "DriftReport", "UnitDrift",
+    "EVENTS", "Event", "EventLog",
+    "ObsHTTPServer", "OpenMetricsError", "find_samples",
+    "parse_openmetrics", "render_openmetrics",
+    "FlightRecord", "FlightRecorder",
+    "BurnRateTracker",
 ]

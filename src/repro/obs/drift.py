@@ -118,7 +118,7 @@ class DriftProfiler:
     def __init__(self, g, qm, artifact, dev, profile, *, every: int = 64,
                  warmup: int = 1, repeats: int = 3, band: float | None = None,
                  measure_fn=None, interpret: bool = True,
-                 window: int = 8, registry=None):
+                 window: int = 8, registry=None, labels: dict | None = None):
         if every < 1:
             raise ValueError("every must be >= 1")
         if artifact.program is None:
@@ -132,6 +132,13 @@ class DriftProfiler:
         self.interpret = interpret
         self.window = window
         self.registry = registry if registry is not None else obs_metrics.REGISTRY
+        # ``labels`` tags every emitted gauge (multi-tenant serving labels
+        # per-model: ``drift.median_deviation{model=vgg16}``)
+        self.labels = dict(labels) if labels else None
+        # cheap summary of the most recent report — the flight recorder
+        # attaches this to request records without re-pricing any unit
+        self.last: dict | None = None
+        self._was_drifted = False
         # acceptance: twice the profile's own fit residual, floored at the
         # calibrate ACCEPT_BAND — jitter within the fit's noise is not drift
         if band is None:
@@ -224,11 +231,32 @@ class DriftProfiler:
                 buf.append(sec)
                 del buf[:-self.window]
         self.n_sampled += 1
-        self.registry.counter("drift.samples").inc()
+        self.registry.counter("drift.samples", self.labels).inc()
         rep = self.report()
         if rep.aggregate is not None:
-            self.registry.gauge("drift.aggregate_deviation").set(rep.aggregate)
-            self.registry.gauge("drift.drifted").set(float(rep.drifted))
+            self.registry.gauge("drift.aggregate_deviation",
+                                self.labels).set(rep.aggregate)
+            self.registry.gauge("drift.drifted",
+                                self.labels).set(float(rep.drifted))
+            # the scrape-facing pair: per-model median deviation + trip bit,
+            # so MultiServer tenants expose drift without anyone polling
+            # report() objects
+            self.registry.gauge("drift.median_deviation",
+                                self.labels).set(rep.aggregate)
+            self.registry.gauge("drift.tripped",
+                                self.labels).set(float(rep.drifted))
+        self.last = {"aggregate": rep.aggregate, "drifted": rep.drifted,
+                     "band": rep.band, "profile_match": rep.profile_match,
+                     "n_sampled": rep.n_sampled}
+        if rep.drifted and not self._was_drifted:
+            from repro.obs.events import EVENTS
+            EVENTS.emit("drift.trip", severity="warning",
+                        message="measured unit times left the acceptance "
+                                "band; plan ranking may be stale",
+                        aggregate=rep.aggregate, band=rep.band,
+                        profile_match=rep.profile_match,
+                        **(self.labels or {}))
+        self._was_drifted = bool(rep.drifted)
 
     # --------------------------------------------------------------- verdict
     def report(self) -> DriftReport:

@@ -38,6 +38,25 @@ def labeled(name: str, labels: dict | None) -> str:
     return f"{name}{{{inner}}}"
 
 
+def parse_labels(name: str) -> tuple[str, dict]:
+    """Inverse of :func:`labeled`: split a mangled metric name back into
+    ``(base_name, labels)`` — ``'requests{model=vgg16}'`` becomes
+    ``('requests', {'model': 'vgg16'})``.  Names without labels return an
+    empty dict.  The OpenMetrics exporter and the registry's ``labelled``
+    query both de-mangle through here, so the round trip is pinned in one
+    place."""
+    if not name.endswith("}") or "{" not in name:
+        return name, {}
+    base, _, inner = name[:-1].partition("{")
+    labels = {}
+    for part in inner.split(","):
+        if not part:
+            continue
+        k, _, v = part.partition("=")
+        labels[k] = v
+    return base, labels
+
+
 class Counter:
     """Monotonically increasing count."""
     __slots__ = ("name", "_value", "_lock")
@@ -221,6 +240,26 @@ class MetricsRegistry:
 
     def get(self, name: str):
         return self._metrics.get(name)
+
+    def labelled(self, name: str, label: str = "model") -> dict:
+        """Every metric registered under base name ``name``, keyed by the
+        value of ``label``: ``labelled("serve.rejected")`` returns
+        ``{"vgg16": Counter, "resnet50": Counter, ...}``.  An unlabeled
+        metric of the same base name appears under ``None``.  This is the
+        query API for per-tenant stats — callers never hand-format
+        ``'name{model=...}'`` lookups."""
+        with self._lock:
+            items = list(self._metrics.items())
+        out = {}
+        for full, m in items:
+            base, labels = parse_labels(full)
+            if base != name:
+                continue
+            if not labels:
+                out[None] = m
+            elif label in labels:
+                out[labels[label]] = m
+        return out
 
     def __len__(self) -> int:
         return len(self._metrics)

@@ -121,7 +121,7 @@ class Tracer:
     """
 
     def __init__(self, capacity: int = 65536, clock=time.monotonic,
-                 enabled: bool = False):
+                 enabled: bool = False, registry=None):
         if capacity < 1:
             raise ValueError("capacity must be >= 1")
         self.capacity = capacity
@@ -133,6 +133,11 @@ class Tracer:
         self._size = 0
         self.n_recorded = 0
         self._local = threading.local()
+        # span-loss gauges, bound lazily on first record: ring occupancy and
+        # drop count become scrapeable instead of living only inside the
+        # Chrome export's otherData
+        self._registry = registry
+        self._g_spans = self._g_dropped = None
 
     # ----------------------------------------------------------- state
     @property
@@ -157,6 +162,9 @@ class Tracer:
             self._buf = [None] * self.capacity
             self._head = self._size = 0
             self.n_recorded = 0
+        if self._g_spans is not None:
+            self._g_spans.set(0)
+            self._g_dropped.set(0)
 
     # ----------------------------------------------------------- recording
     def _stack(self) -> list:
@@ -171,6 +179,21 @@ class Tracer:
             self._head = (self._head + 1) % self.capacity
             self._size = min(self._size + 1, self.capacity)
             self.n_recorded += 1
+            size, dropped = self._size, self.n_recorded - self._size
+        if self._g_spans is None:
+            if self._registry is None:
+                from repro.obs.metrics import REGISTRY
+                self._registry = REGISTRY
+            self._g_spans = self._registry.gauge("trace.spans")
+            self._g_dropped = self._registry.gauge("trace.dropped")
+        self._g_spans.set(size)
+        self._g_dropped.set(dropped)
+
+    def current_span(self):
+        """The calling thread's innermost open span (None outside any) — the
+        event log reads it to correlate events with in-flight spans."""
+        stack = self._stack()
+        return stack[-1] if stack else None
 
     def span(self, name: str, *, cat: str = "", process: str = "measured",
              track: str | None = None, **args):

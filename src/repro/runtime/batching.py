@@ -35,7 +35,7 @@ class DynamicBatcher:
     def __init__(self, run_batch, *, max_batch: int = 8,
                  max_latency_s: float = 2e-3, clock=time.monotonic,
                  latency_window: int = 16384, registry=None, tracer=None,
-                 labels: dict | None = None):
+                 labels: dict | None = None, observers=None):
         """``run_batch(xs) -> list[result]`` executes one batch (one result
         per request, same order).  ``latency_window`` bounds the retained
         latency samples (a long-running server must not grow without bound).
@@ -47,7 +47,15 @@ class DynamicBatcher:
         one.  When the shared tracer is enabled, each request gets a
         queue-wait + execute track and each batch a batch-track span.
         ``labels`` tags every emitted metric (multi-tenant serving labels
-        per-model: ``serve.requests{model=vgg16}``)."""
+        per-model: ``serve.requests{model=vgg16}``).
+
+        ``observers`` are callables invoked on the worker thread once per
+        request after its batch completes (and on batch failure), with one
+        record dict: ``req_id``, ``submit_s``, ``queue_wait_s``,
+        ``execute_s``, ``latency_s``, ``batch_id``, ``batch_size``,
+        ``batch_members``, ``status`` ("ok" | "error"), ``error``.  The
+        flight recorder and the SLO burn-rate tracker plug in here; observer
+        exceptions are swallowed — observability must not break serving."""
         if max_batch < 1:
             raise ValueError("max_batch must be >= 1")
         self._run_batch = run_batch
@@ -77,6 +85,7 @@ class DynamicBatcher:
                           else obs_metrics.REGISTRY)
         self._tracer = tracer if tracer is not None else obs_trace.TRACER
         self.labels = dict(labels) if labels else None
+        self._observers = list(observers) if observers else []
         self._m_requests = self._registry.counter("serve.requests", self.labels)
         self._m_batches = self._registry.counter("serve.batches", self.labels)
         self._m_errors = self._registry.counter("serve.errors", self.labels)
@@ -162,6 +171,30 @@ class DynamicBatcher:
                 self._m_depth.set(len(self._queue))
             self._execute(batch)
 
+    def add_observer(self, fn) -> None:
+        """Register a per-request completion observer (see ``observers``)."""
+        self._observers.append(fn)
+
+    def _notify(self, batch, t_form: float, t_done: float, status: str,
+                error: str | None) -> None:
+        if not self._observers:
+            return
+        members = tuple(seq for _, _, _, seq in batch)
+        bid = self._n_batches
+        for _, _, t0, seq in batch:
+            rec = {"req_id": seq, "submit_s": t0,
+                   "queue_wait_s": t_form - t0,
+                   "execute_s": t_done - t_form,
+                   "latency_s": t_done - t0,
+                   "batch_id": bid, "batch_size": len(batch),
+                   "batch_members": members,
+                   "status": status, "error": error}
+            for fn in self._observers:
+                try:
+                    fn(rec)
+                except Exception:    # observers must never break serving
+                    pass
+
     def _execute(self, batch) -> None:
         t_form = self._clock()
         xs = [x for x, _, _, _ in batch]
@@ -169,6 +202,8 @@ class DynamicBatcher:
             results = self._run_batch(xs)
         except Exception as e:  # surface the failure on every waiting future
             self._m_errors.inc(len(batch))
+            self._notify(batch, t_form, self._clock(), "error",
+                         f"{type(e).__name__}: {e}")
             for _, fut, _, _ in batch:
                 fut.set_exception(e)
             return
@@ -187,6 +222,7 @@ class DynamicBatcher:
             self._m_latency.observe((t_done - t0) * 1e3)
         for (_, fut, _, _), res in zip(batch, results):
             fut.set_result(res)
+        self._notify(batch, t_form, t_done, "ok", None)
         if self._tracer.enabled:
             self._trace_batch(batch, t_form, t_done, self._clock())
 

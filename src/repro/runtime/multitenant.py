@@ -40,12 +40,22 @@ class MultiServer:
 
     def __init__(self, *, ddr_budget_bytes: int | None = None,
                  max_queue: int = 256, slo_classes: dict | None = None,
-                 plan_cache_max_entries: int | None = None):
+                 plan_cache_max_entries: int | None = None,
+                 flight=None, events=None, burn_kw: dict | None = None):
         """``ddr_budget_bytes`` caps the summed planned footprints of all
         resident models (default: the shared device's ``ddr_bytes``).
         ``max_queue`` is the default per-tenant admission bound.
         ``plan_cache_max_entries`` rebounds the shared ``asm.PLAN_CACHE`` —
-        a many-model host sets it to cap resident compiled artifacts."""
+        a many-model host sets it to cap resident compiled artifacts.
+
+        The host owns one observability plane for all tenants: ``flight`` is
+        the shared :class:`~repro.obs.flight.FlightRecorder` (one is created
+        when not given), ``events`` overrides the shared event log, and
+        ``burn_kw`` forwards to every per-tenant
+        :class:`~repro.obs.slo.BurnRateTracker` (window lengths, budget,
+        alert threshold — tests shorten the windows)."""
+        from repro.obs.events import EVENTS
+        from repro.obs.flight import FlightRecorder
         from repro.obs.metrics import REGISTRY
 
         self.ddr_budget_bytes = ddr_budget_bytes
@@ -56,6 +66,10 @@ class MultiServer:
         self._models: dict[str, dict] = {}
         self._device = None             # pinned by the first add_model
         self._registry = REGISTRY
+        self._events = events if events is not None else EVENTS
+        self.flight = flight if flight is not None else FlightRecorder()
+        self._burn_kw = dict(burn_kw) if burn_kw else {}
+        self._obs_http = None
         if plan_cache_max_entries is not None:
             from repro import asm
             asm.PLAN_CACHE.max_entries = plan_cache_max_entries
@@ -110,19 +124,46 @@ class MultiServer:
 
         if target_p99_ms is None:
             target_p99_ms = self.slo_classes[slo]
+        # per-tenant error-budget burn tracking: every completed request
+        # feeds the tracker through the batcher's observer hook; an alert
+        # (fast AND slow windows burning hot) freezes the flight ring
+        burn = None
+        observers = []
+        if target_p99_ms is not None:
+            from repro.obs.slo import BurnRateTracker
+            burn = BurnRateTracker(
+                target_p99_ms, labels={"model": name, "class": slo},
+                registry=self._registry, events=self._events,
+                on_alert=lambda tracker, fast, slow, _n=name:
+                    self.flight.trigger(
+                        "slo_violation", tenant=_n,
+                        detail={"fast_burn": fast, "slow_burn": slow,
+                                "target_p99_ms": tracker.target_ms}),
+                **self._burn_kw)
+            observers.append(burn.observer())
         server = session.serve(target_p99_ms=target_p99_ms,
-                               labels={"model": name}, **server_kw)
+                               labels={"model": name}, flight=self.flight,
+                               events=self._events, observers=observers,
+                               **server_kw)
+        self.flight.set_context(name, slo_class=slo)
         self._models[name] = {
             "session": session, "server": server, "slo": slo,
+            "burn": burn,
             "ddr_base": used, "ddr_bytes": need,
             "max_queue": max_queue if max_queue is not None
             else self.max_queue,
         }
+        self._events.emit("tenant.admit", model=name, slo=slo,
+                          message=f"model {name!r} admitted "
+                                  f"({need} B DDR, class {slo})",
+                          ddr_bytes=need, ddr_base=used)
         return server
 
     def remove_model(self, name: str, wait: bool = True) -> None:
         m = self._models.pop(name)
         m["server"].close(wait=wait)
+        self._events.emit("tenant.remove", model=name,
+                          message=f"model {name!r} removed")
         # re-pack the partition: survivors keep their order, bases close up
         base = 0
         for m in self._models.values():
@@ -132,6 +173,20 @@ class MultiServer:
     def models(self) -> list[str]:
         return list(self._models)
 
+    def attach_drift(self, name: str, **kw):
+        """Attach a per-tenant :class:`~repro.obs.drift.DriftProfiler` to
+        ``name``'s session, labelled ``{model: name}`` so its gauges land
+        next to the tenant's serve metrics on the scrape endpoint.  The
+        flight recorder then stamps the tenant's records with the latest
+        drift summary.  Returns the profiler (``prepare()`` it before a
+        timed window)."""
+        from repro.obs.drift import DriftProfiler
+        session = self._models[name]["session"]
+        kw.setdefault("labels", {"model": name})
+        prof = DriftProfiler.from_session(session, **kw)
+        session.attach_drift(prof)
+        return prof
+
     # ---------------------------------------------------------------- client
     def submit(self, name: str, x):
         """Enqueue one request for tenant ``name``; returns a future.
@@ -140,9 +195,16 @@ class MultiServer:
         queue is at its admission bound — overload sheds load here instead
         of letting one hot model starve every SLO."""
         m = self._models[name]
-        if m["server"]._batcher.pending >= m["max_queue"]:
+        pending = m["server"]._batcher.pending
+        if pending >= m["max_queue"]:
             self._registry.counter("serve.rejected",
                                    {"model": name}).inc()
+            self._events.emit("admission.reject", severity="warning",
+                              model=name, pending=pending,
+                              bound=m["max_queue"],
+                              message=f"model {name!r} queue at admission "
+                                      f"bound ({pending} pending)")
+            self.flight.note_rejection(name, pending, m["max_queue"])
             raise AdmissionError(
                 f"model {name!r} queue at admission bound "
                 f"({m['max_queue']} pending)")
@@ -159,26 +221,49 @@ class MultiServer:
     def stats(self) -> dict:
         budget = (self.ddr_budget_bytes
                   or (self._device.ddr_bytes if self._device else 0))
-        rejected = {
-            name: (self._registry.get(
-                f"serve.rejected{{model={name}}}").value
-                if self._registry.get(f"serve.rejected{{model={name}}}")
-                else 0.0)
-            for name in self._models}
+        # per-tenant counter families come straight off the registry's label
+        # index — no hand-formatted "name{model=...}" lookups
+        per_tenant = {}
+        for family in ("serve.rejected", "serve.requests", "serve.errors"):
+            by_model = self._registry.labelled(family)
+            per_tenant[family] = {
+                name: (by_model[name].value if name in by_model else 0.0)
+                for name in self._models}
+        rejected = per_tenant["serve.rejected"]
         return {
             "models": {name: m["server"].stats()
                        for name, m in self._models.items()},
             "slo": {name: m["slo"] for name, m in self._models.items()},
             "rejected": rejected,
+            "requests": per_tenant["serve.requests"],
+            "errors": per_tenant["serve.errors"],
+            "burn": {name: (m["burn"].burn_rates() if m["burn"] else None)
+                     for name, m in self._models.items()},
             "ddr_partition": self.ddr_partition(),
             "ddr_budget_bytes": budget,
             "ddr_used_bytes": sum(m["ddr_bytes"]
                                   for m in self._models.values()),
         }
 
+    def serve_metrics(self, host: str = "127.0.0.1", port: int = 0):
+        """Mount the OpenMetrics scrape endpoint for the whole host: every
+        tenant's labelled series, the shared flight recorder, and the event
+        log behind one ``/metrics`` (+ ``/flight``, ``/events``,
+        ``/snapshot``).  Returns the running
+        :class:`~repro.obs.export.ObsHTTPServer`; closed with the host."""
+        from repro.obs.export import ObsHTTPServer
+        if self._obs_http is None:
+            self._obs_http = ObsHTTPServer(
+                self._registry, flight=self.flight, events=self._events,
+                host=host, port=port)
+        return self._obs_http
+
     def close(self, wait: bool = True) -> None:
         for m in self._models.values():
             m["server"].close(wait=wait)
+        if self._obs_http is not None:
+            self._obs_http.close()
+            self._obs_http = None
 
     def __enter__(self):
         return self

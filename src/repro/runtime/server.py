@@ -25,7 +25,8 @@ class Server:
     def __init__(self, session, *, max_batch: int = 8,
                  max_latency_s: float = 2e-3, allowed_sizes=None,
                  warmup: bool = True, target_p99_ms: float | None = None,
-                 slo_window: int = 64, labels: dict | None = None):
+                 slo_window: int = 64, labels: dict | None = None,
+                 observers=None, flight=None, events=None):
         """``target_p99_ms`` turns on latency-SLO-aware batch sizing: the
         server watches the p99 of the batcher's bounded latency window
         (last ``slo_window`` submit->result samples) and walks the effective
@@ -33,7 +34,16 @@ class Server:
         a smaller cap both shortens the batch-forming wait and the batched
         launch itself — then back up once p99 clears the target with margin.
         ``max_batch`` stays the hard ceiling.  ``labels`` tags every metric
-        this server emits (multi-tenant hosts label per-model)."""
+        this server emits (multi-tenant hosts label per-model).
+
+        ``observers`` forwards per-request completion observers to the
+        batcher (see :class:`~repro.runtime.batching.DynamicBatcher`).
+        ``flight`` attaches an :class:`~repro.obs.flight.FlightRecorder`:
+        the server binds it as an observer (tenant = ``labels["model"]``),
+        seeds its per-tenant context with the session's launched tile shapes
+        and the SLO target, and keeps request records stamped with the
+        drift profiler's latest state.  ``events`` overrides the shared
+        :data:`~repro.obs.events.EVENTS` log the SLO resizer reports to."""
         from repro.runtime.batching import DynamicBatcher
 
         self.session = session
@@ -54,13 +64,25 @@ class Server:
         self.slo_shrinks_queue_bound = 0
         self.slo_shrinks_launch_bound = 0
         from repro.obs import metrics as obs_metrics
+        from repro.obs import events as obs_events
         self._registry = obs_metrics.REGISTRY
+        self._events = events if events is not None else obs_events.EVENTS
         self.labels = dict(labels) if labels else None
+        self.flight = flight
+        self._obs_http = None
+        obs = list(observers) if observers else []
+        if flight is not None:
+            tenant = (self.labels or {}).get("model")
+            flight.set_context(tenant, tiles=session.tile_summary(),
+                               target_p99_ms=target_p99_ms,
+                               allowed_sizes=list(self.allowed_sizes))
+            obs.append(flight.bind(tenant=tenant,
+                                   drift_state=session.drift_state))
         if warmup:
             self._warmup()
         self._batcher = DynamicBatcher(self._run, max_batch=max_batch,
                                        max_latency_s=max_latency_s,
-                                       labels=self.labels)
+                                       labels=self.labels, observers=obs)
 
     def _warmup(self) -> None:
         """Trace every allowed batch shape once so steady-state serving never
@@ -140,6 +162,22 @@ class Server:
                     self.slo_shrinks_launch_bound += 1
                 self._registry.counter(f"serve.slo_shrink.{cause}_bound",
                                        self.labels).inc()
+                self._events.emit(
+                    "slo.resize", severity="warning",
+                    message=f"p99 {p99:.2f}ms over {self.target_p99_ms}ms "
+                            f"target; batch cap {cur} -> {smaller[-1]} "
+                            f"({cause}-bound)",
+                    direction="shrink", cause=cause, old_cap=cur,
+                    new_cap=smaller[-1], p99_ms=p99,
+                    target_p99_ms=self.target_p99_ms,
+                    **(self.labels or {}))
+                if self.flight is not None:
+                    self.flight.trigger(
+                        "slo_violation", tenant=(self.labels or {}).get("model"),
+                        detail={"p99_ms": p99,
+                                "target_p99_ms": self.target_p99_ms,
+                                "cause": cause, "old_cap": cur,
+                                "new_cap": smaller[-1]})
         elif p99 < 0.5 * self.target_p99_ms and cur < self.max_batch:
             bigger = [s for s in self.allowed_sizes
                       if cur < s <= self.max_batch]
@@ -148,13 +186,35 @@ class Server:
                 self._slo_mark = self._batcher.n_served
                 self.slo_grows += 1
                 self._registry.counter("serve.slo_grow", self.labels).inc()
+                self._events.emit(
+                    "slo.resize", severity="info",
+                    message=f"p99 {p99:.2f}ms well under "
+                            f"{self.target_p99_ms}ms target; batch cap "
+                            f"{cur} -> {bigger[0]}",
+                    direction="grow", old_cap=cur, new_cap=bigger[0],
+                    p99_ms=p99, target_p99_ms=self.target_p99_ms,
+                    **(self.labels or {}))
 
     # ---------------------------------------------------------------- client
     def submit(self, x):
         return self._batcher.submit(x)   # the batcher timestamps + records
 
+    def serve_metrics(self, host: str = "127.0.0.1", port: int = 0):
+        """Mount the OpenMetrics scrape endpoint (plus /flight, /events,
+        /snapshot) for this server's plane; returns the running
+        :class:`~repro.obs.export.ObsHTTPServer` (closed with the server)."""
+        from repro.obs.export import ObsHTTPServer
+        if self._obs_http is None:
+            self._obs_http = ObsHTTPServer(
+                self._registry, flight=self.flight, events=self._events,
+                host=host, port=port)
+        return self._obs_http
+
     def close(self, wait: bool = True) -> None:
         self._batcher.close(wait=wait)
+        if self._obs_http is not None:
+            self._obs_http.close()
+            self._obs_http = None
 
     def __enter__(self):
         return self

@@ -121,6 +121,30 @@ class Session:
         counts as one observed launch (the profiler samples every Nth)."""
         self.drift = profiler
 
+    def drift_state(self) -> dict | None:
+        """The attached profiler's most recent summary (None when no drift
+        profiler is attached or it has not sampled yet) — what the flight
+        recorder stamps onto request records."""
+        return self.drift.last if self.drift is not None else None
+
+    def tile_summary(self) -> list[dict]:
+        """Launched tile shape per lowered unit — the static per-tenant
+        context the flight recorder carries in forensic dumps.  ``tile``
+        is the searched (t_h, t_w, t_oc), or None when the kernel's
+        heuristic shapes run."""
+        from repro.core import lower
+        if self.artifact.program is None:
+            return []
+        out = []
+        for item in self.artifact.program.items:
+            if isinstance(item, lower.RefFallback):
+                out.append({"nodes": "+".join(item.nodes),
+                            "kind": "fallback", "tile": None})
+            else:
+                out.append({"nodes": "+".join(item.nodes), "kind": item.kind,
+                            "tile": list(item.tile) if item.tile else None})
+        return out
+
     def run(self, x) -> dict:
         """One request; accepts (H, W, C) or (1, H, W, C) int8."""
         x = np.asarray(x)

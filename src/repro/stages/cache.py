@@ -10,6 +10,7 @@ zoo benchmark's "warm reopen compiles 0 stages" gate reads them.
 from __future__ import annotations
 
 import threading
+import time
 
 STAGE_NAMES = ("wrapped", "lowered", "planned", "compiled")
 
@@ -25,7 +26,7 @@ class StageCache:
     intermediate stage.
     """
 
-    def __init__(self, max_entries: int = 32, registry=None):
+    def __init__(self, max_entries: int = 32, registry=None, events=None):
         if max_entries < 1:
             raise ValueError("max_entries must be >= 1")
         self.max_entries = max_entries
@@ -35,6 +36,13 @@ class StageCache:
             from repro.obs.metrics import REGISTRY
             registry = REGISTRY
         self._registry = registry
+        self._events = events
+
+    def _evt(self):
+        if self._events is None:
+            from repro.obs.events import EVENTS
+            self._events = EVENTS
+        return self._events
 
     def _count(self, stage: str, what: str) -> None:
         self._registry.counter(f"stages.{stage}.{what}").inc()
@@ -49,14 +57,27 @@ class StageCache:
         if obj is not None:
             self._count(stage, "hits")
             return obj, True
+        t0 = time.perf_counter()
         obj = build()
         self._count(stage, "misses")
+        self._evt().emit("compile.stage", stage=stage, key=str(key)[:16],
+                         seconds=time.perf_counter() - t0,
+                         message=f"built {stage} stage in "
+                                 f"{time.perf_counter() - t0:.3f}s")
+        evicted = 0
         with self._lock:
             table.pop(key, None)
             table[key] = obj
             while len(table) > self.max_entries:
                 table.pop(next(iter(table)))
-                self._count(stage, "evictions")
+                evicted += 1
+        for _ in range(evicted):
+            self._count(stage, "evictions")
+        if evicted:
+            self._evt().emit("cache.evict", stage=stage, n=evicted,
+                             message=f"stage cache evicted {evicted} "
+                                     f"{stage} entr"
+                                     f"{'y' if evicted == 1 else 'ies'}")
         return obj, False
 
     def stats(self) -> dict:

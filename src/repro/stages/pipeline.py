@@ -47,9 +47,15 @@ def compile_model(g, qm, dev, *, profile=None, device_of=None, strategy=None,
                       _art._sha(host), pin_input,
                       int(ddr_budget_bytes or 0))
 
+    from repro.obs.events import EVENTS
+
     if zoo is not None and strategy is None:
         art = zoo.find_source(skey)
         if art is not None:
+            EVENTS.emit("compile.model", model=name, source_key=skey[:16],
+                        reopened=True,
+                        message=f"model {name or skey[:16]} reopened from "
+                                "zoo (0 stages run)")
             return Compiled.from_artifact(art)
 
     lowered = wrapped.lower(strategy=strategy, profile=resolved,
@@ -60,4 +66,8 @@ def compile_model(g, qm, dev, *, profile=None, device_of=None, strategy=None,
                             cache=cache).compile(cache=cache)
     if zoo is not None:
         zoo.put(compiled.artifact, name=name, source_key=skey)
+    EVENTS.emit("compile.model", model=name, source_key=skey[:16],
+                reopened=False,
+                message=f"model {name or skey[:16]} compiled through the "
+                        "staged pipeline")
     return compiled

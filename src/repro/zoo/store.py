@@ -36,6 +36,11 @@ def _registry():
     return REGISTRY
 
 
+def _events():
+    from repro.obs.events import EVENTS
+    return EVENTS
+
+
 class ModelZoo:
     def __init__(self, root: str | None = None, *,
                  max_entries: int | None = None,
@@ -96,6 +101,10 @@ class ModelZoo:
         self._write_meta(key, rec)
         _registry().counter("zoo.puts").inc()
         if fresh:
+            _events().emit("zoo.put", key=key[:16], model=name,
+                           size_bytes=rec["size_bytes"],
+                           message=f"shelved {name or key[:16]} "
+                                   f"({rec['size_bytes']} B)")
             self.evict()
         return key
 
@@ -179,6 +188,12 @@ class ModelZoo:
             self.remove(victim["key"])
             evicted.append(victim["key"])
             _registry().counter("zoo.evictions").inc()
+        if evicted:
+            _events().emit("zoo.evict", n=len(evicted),
+                           keys=[k[:16] for k in evicted],
+                           message=f"zoo evicted {len(evicted)} "
+                                   "least-recently-used entr"
+                                   f"{'y' if len(evicted) == 1 else 'ies'}")
         return evicted
 
     # ------------------------------------------------------------ pipelines

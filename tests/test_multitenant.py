@@ -102,6 +102,86 @@ def test_admission_control_sheds_load(two_models):
     assert REGISTRY.get("serve.rejected{model=a}").value >= 1.0
 
 
+def test_rejection_feeds_events_and_flight_recorder(two_models):
+    """ISSUE 8: shedding load writes an ``admission.reject`` event, a
+    ``rejected`` flight record, and an ``admission_rejection`` forensic
+    dump carrying the tenant's static context."""
+    from repro.obs.events import EventLog
+    from repro.obs.flight import FlightRecorder
+
+    sa, _ = two_models
+    g = sa.graph
+    x = np.zeros(tuple(g.shape("data")[1:]), np.int8)
+    events = EventLog()
+    flight = FlightRecorder(capacity=16, events=events)
+    with MultiServer(flight=flight, events=events) as ms:
+        ms.add_model("a", sa, max_queue=0, warmup=False)
+        with pytest.raises(AdmissionError):
+            ms.submit("a", x)
+    assert [e.kind for e in events.records(kind="admission")] \
+        == ["admission.reject"]
+    rec = flight.records()[-1]
+    assert rec.status == "rejected" and rec.tenant == "a"
+    dump = flight.dumps()[-1]
+    assert dump["reason"] == "admission_rejection"
+    assert dump["context"]["a"]["slo_class"] == "best_effort"
+    assert dump["context"]["a"]["tiles"] == sa.tile_summary()
+
+
+def test_stats_use_label_index_and_expose_burn(two_models):
+    """ISSUE 8 satellite: per-tenant stats come from
+    ``MetricsRegistry.labelled`` (no hand-formatted name lookups) and carry
+    live burn rates for SLO-targeted tenants."""
+    sa, sb = two_models
+    g = sa.graph
+    x = np.zeros(tuple(g.shape("data")[1:]), np.int8)
+    with MultiServer(burn_kw=dict(fast_window_s=1.0, slow_window_s=2.0,
+                                  min_samples=4)) as ms:
+        ms.add_model("a", sa, slo="gold", warmup=False)
+        ms.add_model("b", sb, slo="best_effort", warmup=False)
+        before = ms.stats()["requests"]["a"]
+        [f.result(timeout=30) for f in [ms.submit("a", x) for _ in range(3)]]
+        st = ms.stats()
+    # the shared registry accumulates across tests: assert the delta
+    assert st["requests"]["a"] >= before + 3.0
+    assert set(st["requests"]) == set(st["rejected"]) == {"a", "b"}
+    assert st["burn"]["b"] is None                 # no target, no tracker
+    assert set(st["burn"]["a"]) == {"fast", "slow", "n_fast", "n_slow"}
+    assert st["burn"]["a"]["n_fast"] >= 3
+    # the burn gauges are scrapeable with model+class+window labels
+    g_fast = REGISTRY.get("slo.burn_rate{class=gold,model=a,window=fast}")
+    assert g_fast is not None
+
+
+def test_gold_slo_violation_alerts_and_dumps(two_models):
+    """A gold tenant with an unattainable target must burn its error budget,
+    fire the burn-rate alert, and freeze a slo_violation flight dump whose
+    records carry the offending requests' queue/execute split."""
+    from repro.obs.events import EventLog
+    from repro.obs.flight import FlightRecorder
+
+    sa, _ = two_models
+    g = sa.graph
+    x = np.zeros(tuple(g.shape("data")[1:]), np.int8)
+    events = EventLog()
+    flight = FlightRecorder(capacity=64, events=events)
+    with MultiServer(flight=flight, events=events,
+                     burn_kw=dict(fast_window_s=30.0, slow_window_s=60.0,
+                                  min_samples=4, cooldown_s=0.0)) as ms:
+        # 1e-6 ms p99 is unattainable: every request violates
+        ms.add_model("a", sa, slo="gold", target_p99_ms=1e-6, warmup=False)
+        [f.result(timeout=30) for f in [ms.submit("a", x) for _ in range(8)]]
+    alerts = events.records(kind="slo.alert")
+    assert alerts and alerts[0].fields["model"] == "a"
+    assert alerts[0].fields["fast_burn"] >= 2.0
+    dumps = [d for d in flight.dumps() if d["reason"] == "slo_violation"]
+    assert dumps
+    ok = [r for r in dumps[-1]["records"] if r["status"] == "ok"]
+    assert ok and all(r["queue_wait_s"] >= 0 and r["execute_s"] > 0
+                      and r["batch_size"] >= 1 for r in ok)
+    assert REGISTRY.get("slo.alerts{class=gold,model=a}").value >= 1.0
+
+
 # -------------------------------------------------- bounded shared plan cache
 def test_plan_cache_lru_eviction_across_three_models():
     """A shared plan cache bounded to 2 entries serving 3 models must evict

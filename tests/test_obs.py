@@ -324,6 +324,48 @@ def test_drift_sampling_cadence(toy_session):
     assert dp.n_observed == 8 and dp.n_sampled == 2
 
 
+def test_drift_gauges_are_labelled_per_model(toy_session):
+    """ISSUE 8 satellite: drift reports land as per-model gauges
+    (``drift.median_deviation{model=}``, ``drift.tripped{model=}``) and the
+    first False->True transition emits one ``drift.trip`` event."""
+    reg = MetricsRegistry()
+    p2 = dataclasses.replace(
+        toy_session.profile,
+        coef=tuple(2 * c for c in toy_session.profile.coef))
+    dp = DriftProfiler(toy_session.graph, toy_session.qm,
+                       toy_session.artifact, toy_session.device, p2, every=1,
+                       measure_fn=_prediction_fn(toy_session),
+                       registry=reg, labels={"model": "toy"})
+    # the trip event goes through the shared log; watch it via a subscriber
+    from repro.obs.events import EVENTS
+    trips = []
+    watch = lambda e: trips.append(e) if e.kind == "drift.trip" else None
+    EVENTS.subscribe(watch)
+    try:
+        dp.sample()
+        dp.sample()                       # still drifted: no second event
+    finally:
+        EVENTS.unsubscribe(watch)
+    assert reg.get("drift.median_deviation{model=toy}").value \
+        == pytest.approx(0.5, abs=1e-9)
+    assert reg.get("drift.tripped{model=toy}").value == 1.0
+    assert reg.get("drift.samples{model=toy}").value == 2.0
+    assert len(trips) == 1
+    assert trips[0].fields["model"] == "toy"
+    # the cached summary the flight recorder stamps onto records
+    assert dp.last["drifted"] and dp.last["aggregate"] \
+        == pytest.approx(0.5, abs=1e-9)
+    assert toy_session.drift_state() is None   # nothing attached
+
+
+def test_session_tile_summary_names_every_lowered_unit(toy_session):
+    tiles = toy_session.tile_summary()
+    assert tiles and len(tiles) == len(toy_session.artifact.program.items)
+    for t in tiles:
+        assert set(t) == {"nodes", "kind", "tile"}
+        assert t["kind"] in ("chain", "horizontal", "fallback")
+
+
 def test_drift_attaches_to_session_serving(toy_session):
     dp = DriftProfiler.from_session(toy_session, every=2,
                                     measure_fn=_prediction_fn(toy_session),
