@@ -3,7 +3,7 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test ci test-multidevice dev-deps bench-table3 serve-smoke \
         tune-smoke bench-tune tile-smoke bench-tile obs-smoke bench-obs \
-        zoo-smoke bench-zoo examples-smoke
+        zoo-smoke bench-zoo explain-smoke bench-explain examples-smoke
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -23,7 +23,7 @@ test:
 # cores; on throttled 2-core CI boxes it can exceed any sane wall budget, so
 # it gates separately (make test-multidevice).
 ci: dev-deps serve-smoke tune-smoke tile-smoke obs-smoke zoo-smoke \
-    examples-smoke
+    explain-smoke examples-smoke
 	$(PY) -m pytest -q --ignore=tests/test_multidevice.py
 
 test-multidevice:
@@ -96,6 +96,21 @@ zoo-smoke:
 # Full zoo benchmark: more traffic, default knobs.
 bench-zoo:
 	$(PY) benchmarks/zoo_bench.py --requests 96 --json zoo_bench.json
+
+# Compile-provenance acceptance (ISSUE 9): compile vgg16@32, strict-parse
+# and render the embedded CompileReport (fusion decisions with recorded
+# not-chosen alternatives, tile leaderboard, DDR map), retune the tiles and
+# assert the plan diff names exactly the changed units, scrape the
+# /explain/<model> route mid-serve, and gate search-tracing overhead <= 5%.
+# Writes benchmarks/out/explain_bench.json (CI build artifact).
+explain-smoke:
+	$(PY) benchmarks/explain_bench.py --model vgg16 --img 32 --smoke \
+	    --json explain_bench.json
+
+# Full explain benchmark: all three nets.
+bench-explain:
+	$(PY) benchmarks/explain_bench.py --model vgg16 --model resnet50 \
+	    --model googlenet --json explain_bench.json
 
 # The README quickstarts must keep running: both examples at small
 # resolution (documentation that executes is documentation that's true).

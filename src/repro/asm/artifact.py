@@ -42,8 +42,13 @@ from repro.memory import MemoryPlanError, plan_memory
 # v4: launches carry the searched tile shape (``FusedLaunch.tile``) and the
 # artifact meta records ``tile_shapes``.  v3 artifacts load fine — a missing
 # tile record means the kernel-heuristic shapes, exactly what v3 ran.
-FORMAT_VERSION = 4
-_LOADABLE_VERSIONS = (3, FORMAT_VERSION)
+# v5: the artifact embeds its compile-decision provenance — meta carries the
+# bounded pathsearch ``search_trace``, the tile-search ``tile_provenance``
+# leaderboard (top-K candidates per unit), and the assembled
+# ``compile_report`` (see ``repro.explain``).  v3/v4 artifacts load fine — a
+# missing report just means ``explain`` degrades to what the plan alone says.
+FORMAT_VERSION = 5
+_LOADABLE_VERSIONS = (3, 4, FORMAT_VERSION)
 _OPCODES = ("LOAD", "SAVE", "CONV", "POOL", "MISC", "END")
 # attrs whose JSON lists must come back as tuples (XGraph convention)
 _TUPLE_ATTRS = {"shape", "kernel", "stride", "dilation", "pad"}
@@ -145,6 +150,64 @@ def _untuple(k, v):
     return v
 
 
+# --------------------------------------------------------------- provenance
+# Bounds on the tile-search leaderboard persisted into the artifact: the full
+# provenance can carry every enumerated candidate of every unit; the artifact
+# keeps the default plus the best few per unit (enough to explain the choice)
+# for a bounded number of units.
+TILE_PROVENANCE_MAX_UNITS = 128
+TILE_PROVENANCE_MAX_CANDIDATES = 8
+
+
+def json_sanitize(v):
+    """Recursive coercion to JSON-native types (numpy scalars to Python,
+    tuples to lists, non-finite floats to None) so ``save_artifact``'s strict
+    ``json.dumps`` round trip never chokes on provenance payloads."""
+    import math
+
+    if isinstance(v, dict):
+        return {str(k): json_sanitize(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [json_sanitize(x) for x in v]
+    if isinstance(v, (bool, str, type(None))):
+        return v
+    if isinstance(v, (int, np.integer)):
+        return int(v)
+    if isinstance(v, (float, np.floating)):
+        f = float(v)
+        return f if math.isfinite(f) else None
+    return str(v)
+
+
+def bounded_tile_provenance(prov, *,
+                            max_units: int = TILE_PROVENANCE_MAX_UNITS,
+                            max_candidates: int = TILE_PROVENANCE_MAX_CANDIDATES
+                            ) -> list | None:
+    """Bound the tune.tiles leaderboard for artifact embedding: per unit keep
+    the kernel default plus the best ``max_candidates - 1`` others (measured
+    seconds when available, else predicted), recording how many candidates
+    the search actually scored."""
+    if not prov:
+        return None
+
+    def rank(c):
+        for k in ("measured", "predicted"):
+            if c.get(k) is not None:
+                return float(c[k])
+        return float("inf")
+
+    out = []
+    for entry in prov[:max_units]:
+        e = dict(entry)
+        cands = list(e.get("candidates") or [])
+        defaults = [c for c in cands if c.get("default")]
+        rest = sorted((c for c in cands if not c.get("default")), key=rank)
+        e["candidates"] = defaults + rest[:max(0, max_candidates - len(defaults))]
+        e["n_candidates"] = len(cands)
+        out.append(e)
+    return json_sanitize(out)
+
+
 # -------------------------------------------------------------------- artifact
 @dataclasses.dataclass
 class CompiledArtifact:
@@ -183,6 +246,24 @@ class CompiledArtifact:
         """Searched per-launch tile shapes this plan was compiled with
         (tile_key -> (t_h, t_w, t_oc); {} = kernel-heuristic shapes)."""
         return dict(self.meta.get("tile_shapes") or {})
+
+    @property
+    def tile_provenance(self) -> list:
+        """Bounded tile-search leaderboard (per-unit candidates with predicted
+        / measured seconds); [] for pre-v5 artifacts or untuned plans."""
+        return list(self.meta.get("tile_provenance") or [])
+
+    @property
+    def search_trace(self) -> dict | None:
+        """Bounded pathsearch decision trace; None for pre-v5 artifacts."""
+        return self.meta.get("search_trace")
+
+    @property
+    def report(self) -> dict | None:
+        """The embedded CompileReport (see ``repro.explain``); None for
+        pre-v5 artifacts — use ``repro.explain.report_of`` to get a degraded
+        reconstruction instead of None."""
+        return self.meta.get("compile_report")
 
     @property
     def peak_ddr_bytes(self) -> int:
@@ -317,7 +398,7 @@ def assemble_artifact(g: XGraph, strategy, dev: DeviceModel,
                       profile_name: str | None = None) -> CompiledArtifact:
     """Package a planned + lowered compilation into the DNNVM object file."""
     tile_shapes = dict(strategy.meta.get("tile_shapes") or {})
-    return CompiledArtifact(
+    art = CompiledArtifact(
         graph_sig=graph_signature(g),
         device=dev.name,
         groups=[list(grp) for grp in strategy.groups],
@@ -330,7 +411,14 @@ def assemble_artifact(g: XGraph, strategy, dev: DeviceModel,
               # tile provenance: the artifact re-keys identically to the
               # strategy that produced it (strategy_signature hashes these)
               "tile_shapes": {k: list(v) for k, v in tile_shapes.items()},
-              "tile_source": strategy.meta.get("tile_source")},
+              "tile_source": strategy.meta.get("tile_source"),
+              # decision provenance (v5): the search's audit trace and the
+              # tile-search leaderboard survive the npz round trip, so a
+              # reopened artifact can still explain its own choices
+              "search_trace": json_sanitize(
+                  strategy.meta.get("search_trace")),
+              "tile_provenance": bounded_tile_provenance(
+                  strategy.meta.get("tile_provenance"))},
         exec_items=[list(grp) for grp in planres.items],
         instrs=planres.instrs,
         mem_summary=planres.mem_summary,
@@ -342,6 +430,17 @@ def assemble_artifact(g: XGraph, strategy, dev: DeviceModel,
         biases={k: np.asarray(v) for k, v in qm.biases.items()} if qm else {},
         sim_total_cycles=planres.sim_total_cycles,
         program=program)
+    # The CompileReport (repro.explain) is assembled here — the one point
+    # where graph, strategy, plan, and lowered program are all in hand — and
+    # embedded so every artifact ships its own explanation.  Lazy import:
+    # explain consumes asm types, not the other way around.
+    from repro.explain.report import build_report
+
+    art.meta["compile_report"] = json_sanitize(build_report(
+        g, strategy, dev, planres, program,
+        profile_hash=profile_hash,
+        profile_name=profile_name or strategy.meta.get("profile_name")))
+    return art
 
 
 def compile_strategy(g: XGraph, strategy, dev: DeviceModel,

@@ -225,6 +225,7 @@ class Int8Executor:
             self.groups = [[n] for n in g.compute_nodes()]
         self.interpret = interpret
         self._fn = None
+        self._fb_reasons = None
         self._in_shape = next((g.shape(n.name) for n in g if n.op == "input"),
                               None)
 
@@ -302,7 +303,23 @@ class Int8Executor:
                 self.program.meta.get("n_launches", 0))
             REGISTRY.counter("executor.fallback_launches").inc(
                 self.program.meta.get("n_fallbacks", 0))
+            # per-reason fallback counters: the lowering records a machine-
+            # readable reason on every RefFallback (lower.FALLBACK_REASONS);
+            # exporting it labelled makes a lowering-gap regression (a YOLO op
+            # sliding back to the reference path) visible on /metrics instead
+            # of only moving an aggregate
+            for reason, n in self._fallback_reasons().items():
+                REGISTRY.counter("executor.fallback",
+                                 {"reason": reason}).inc(n)
         return {k: np.asarray(v) for k, v in out.items()}
+
+    def _fallback_reasons(self) -> dict:
+        """reason -> launches-per-call, computed once from the program."""
+        if self._fb_reasons is None:
+            from collections import Counter as _Counter
+            self._fb_reasons = dict(_Counter(
+                fb.reason for fb in self.program.fallbacks()))
+        return self._fb_reasons
 
 
 def build_group_callable(g: XGraph, group: list, params_or_qm):

@@ -35,6 +35,22 @@ from repro.hw import DeviceModel
 
 HORIZONTAL_OK = templates.CONVS | templates.POOLS
 
+# Bounds for the recorded search trace (``Strategy.meta['search_trace']``).
+# The trace is an audit record, not a database: per chain it keeps the chosen
+# partition, the cheapest few scored-but-not-chosen alternatives, and a
+# bounded sample of rejections — enough for ``repro.explain`` to say *why*
+# this strategy and not another, at a few KB per model.
+TRACE_MAX_CHAINS = 64
+TRACE_MAX_ALTERNATIVES = 8
+TRACE_MAX_REJECT_EXAMPLES = 4
+
+# Machine-readable rejection vocabulary (mirrors lower.FALLBACK_REASONS in
+# spirit): every candidate segment the search discards carries one of these.
+REJECT_REASONS = frozenset({
+    "no_fusion_template",   # a consecutive pair matches no kernel template
+    "infeasible_tiling",    # tiling solver failed fusion condition 1 (Eq. 6)
+})
+
 
 @dataclasses.dataclass
 class Strategy:
@@ -84,22 +100,42 @@ def _segment_valid(g: XGraph, ops: list[str], pairs: set) -> bool:
     return all((ops[k], ops[k + 1]) in pairs for k in range(len(ops) - 1))
 
 
-def partition_chain(g: XGraph, chain: list[str], pairs: set, evaluator) -> tuple[list[list[str]], float]:
+def partition_chain(g: XGraph, chain: list[str], pairs: set, evaluator, *,
+                    collect: dict | None = None,
+                    seg_costs: dict | None = None) -> tuple[list[list[str]], float]:
     """Optimal partition of one chain into fused segments via Floyd (paper's
-    choice; O(m^3) with m = chain length, m is small for real CNNs)."""
+    choice; O(m^3) with m = chain length, m is small for real CNNs).
+
+    ``collect``/``seg_costs`` are optional trace sinks: direct per-segment
+    evaluator costs must be captured here at matrix-fill time, because the
+    Floyd relaxation below overwrites ``cost[i][j]`` with multi-segment path
+    costs and the candidate scores are unrecoverable afterwards."""
     m = len(chain)
     big = INFEASIBLE
     cost = [[big] * (m + 1) for _ in range(m + 1)]
     for i in range(m + 1):
         cost[i][i] = 0.0
+    n_feasible = 0
     for i in range(m):
         for j in range(i + 1, m + 1):
             seg = chain[i:j]
             if j - i > 1 and not _segment_valid(g, seg, pairs):
+                if collect is not None:
+                    collect["rejected"].append((seg, "no_fusion_template"))
                 continue
             c = evaluator(seg)
             if math.isfinite(c):
                 cost[i][j] = c
+                n_feasible += 1
+                if seg_costs is not None:
+                    seg_costs[tuple(seg)] = c
+                if collect is not None:
+                    collect["scored"].append((seg, c))
+            elif collect is not None:
+                collect["rejected"].append((seg, "infeasible_tiling"))
+    if collect is not None:
+        collect["m"] = m
+        collect["n_feasible_segments"] = n_feasible
     nxt = [[-1] * (m + 1) for _ in range(m + 1)]
     for i in range(m + 1):
         for j in range(m + 1):
@@ -131,15 +167,17 @@ def partition_chain(g: XGraph, chain: list[str], pairs: set, evaluator) -> tuple
 
 # ------------------------------------------------------------ the search
 def search(g: XGraph, dev: DeviceModel, evaluator=None,
-           device_of=None, enable_horizontal: bool = True) -> Strategy:
+           device_of=None, enable_horizontal: bool = True,
+           trace: bool = True) -> Strategy:
     from repro.obs.trace import TRACER
     with TRACER.span("pathsearch", cat="compile", track="compile",
                      graph=g.name):
-        return _search(g, dev, evaluator, device_of, enable_horizontal)
+        return _search(g, dev, evaluator, device_of, enable_horizontal, trace)
 
 
 def _search(g: XGraph, dev: DeviceModel, evaluator=None,
-            device_of=None, enable_horizontal: bool = True) -> Strategy:
+            device_of=None, enable_horizontal: bool = True,
+            trace: bool = True) -> Strategy:
     evaluator = evaluator or AnalyticEvaluator(g, dev)
     plannable = {n.name for n in g
                  if n.op != "input" and (device_of is None or device_of(n.name) == "acc")}
@@ -152,9 +190,31 @@ def _search(g: XGraph, dev: DeviceModel, evaluator=None,
         for nm in ch:
             chain_of_node[nm] = idx
 
+    # seg_costs is the global direct-cost ledger: every partition_chain call
+    # (including the speculative eltwise-absorb / horizontal-tail probes below)
+    # feeds it, so every segment that ends up a final group has its evaluator
+    # score on record regardless of which probe first scored it.
+    seg_costs: dict[tuple, float] | None = {} if trace else None
+    chain_traces: list[dict] = []
+    eltwise_trace: list[dict] = []
+    horizontal_trace: list[dict] = []
+
+    def _collector() -> dict | None:
+        if not trace or len(chain_traces) >= TRACE_MAX_CHAINS:
+            return None
+        c = {"scored": [], "rejected": []}
+        chain_traces.append(c)
+        return c
+
     solved: dict[int, tuple[list[list[str]], float]] = {}
     for idx, ch in enumerate(chains):
-        solved[idx] = partition_chain(g, ch, pairs, evaluator)
+        collect = _collector()
+        solved[idx] = partition_chain(g, ch, pairs, evaluator,
+                                      collect=collect, seg_costs=seg_costs)
+        if collect is not None:
+            collect["nodes"] = list(ch)
+            collect["chosen"] = [list(s) for s in solved[idx][0]]
+            collect["cost"] = solved[idx][1]
 
     # --- barrier case 1: absorb an eltwise merge into one incoming branch ----
     for idx, ch in enumerate(chains):
@@ -163,6 +223,7 @@ def _search(g: XGraph, dev: DeviceModel, evaluator=None,
         if node.op != "eltwise_add" or len(node.inputs) != 2:
             continue
         best_delta, best_move = 0.0, None
+        options: list[dict] = []
         for prod in node.inputs:
             if prod not in chain_of_node or (prod, head) not in pairs:
                 continue
@@ -172,30 +233,42 @@ def _search(g: XGraph, dev: DeviceModel, evaluator=None,
                 continue
             # candidate: chain' = pch + [head], this chain loses its head
             try:
-                new_p, cost_p = partition_chain(g, pch + [head], pairs, evaluator)
+                new_p, cost_p = partition_chain(g, pch + [head], pairs,
+                                                evaluator, seg_costs=seg_costs)
             except RuntimeError:
                 continue
             rest = ch[1:]
             if rest:
-                new_c, cost_c = partition_chain(g, rest, pairs, evaluator)
+                new_c, cost_c = partition_chain(g, rest, pairs, evaluator,
+                                                seg_costs=seg_costs)
             else:
                 new_c, cost_c = [], 0.0
             old = solved[pidx][1] + solved[idx][1]
             delta = (cost_p + cost_c) - old
+            options.append({"producer": prod, "delta_s": delta})
             if delta < best_delta:
                 best_delta = delta
-                best_move = (pidx, new_p, cost_p, new_c, cost_c)
+                best_move = (pidx, new_p, cost_p, new_c, cost_c, prod)
         if best_move:
-            pidx, new_p, cost_p, new_c, cost_c = best_move
+            pidx, new_p, cost_p, new_c, cost_c, prod = best_move
             solved[pidx] = (new_p, cost_p)
             solved[idx] = (new_c, cost_c)
             chains[pidx] = chains[pidx] + [head]
             chains[idx] = ch[1:]
             chain_of_node[head] = pidx
+        if trace and options:
+            eltwise_trace.append({
+                "eltwise": head,
+                "absorbed": best_move is not None,
+                "into": best_move[5] if best_move else None,
+                "delta_s": best_delta if best_move else 0.0,
+                "options": options,
+            })
 
     # --- barrier case 2: horizontal fusion at forks ---------------------------
     horizontal: list[list[str]] = []
     h_cost = 0.0
+    h_cost_of: dict[tuple, float] = {}
     if enable_horizontal:
         for name in g.topo_order():
             cons = [c for c in g.consumers(name)
@@ -213,6 +286,10 @@ def _search(g: XGraph, dev: DeviceModel, evaluator=None,
                 t = tiling.solve_horizontal(g, heads, dev)
                 hcost = _tiling_seconds(t, dev) if t.feasible else INFEASIBLE
             if not math.isfinite(hcost):
+                if trace:
+                    horizontal_trace.append({
+                        "input": name, "heads": list(heads), "fused": False,
+                        "reason": "infeasible_tiling"})
                 continue
             # compare: horizontal group + tails   vs   current chains
             olds, news, tails_groups = 0.0, hcost, []
@@ -223,7 +300,8 @@ def _search(g: XGraph, dev: DeviceModel, evaluator=None,
                 rest = chains[cidx][1:]
                 if rest:
                     try:
-                        tg, tc = partition_chain(g, rest, pairs, evaluator)
+                        tg, tc = partition_chain(g, rest, pairs, evaluator,
+                                                 seg_costs=seg_costs)
                     except RuntimeError:
                         ok = False
                         break
@@ -231,11 +309,20 @@ def _search(g: XGraph, dev: DeviceModel, evaluator=None,
                     tg, tc = [], 0.0
                 news += tc
                 tails_groups.append((cidx, tg, tc))
-            if ok and news < olds:
+            fused = ok and news < olds
+            if fused:
                 horizontal.append(heads)
                 h_cost += hcost
+                h_cost_of[tuple(heads)] = hcost
                 for cidx, tg, tc in tails_groups:
                     solved[cidx] = (tg, tc)
+            if trace:
+                horizontal_trace.append({
+                    "input": name, "heads": list(heads), "fused": fused,
+                    "fused_cost_s": hcost,
+                    "with_tails_cost_s": news if ok else None,
+                    "split_cost_s": olds,
+                })
 
     groups: list[list[str]] = []
     total = h_cost
@@ -251,6 +338,10 @@ def _search(g: XGraph, dev: DeviceModel, evaluator=None,
                         cost=total, meta={"host_nodes": host_nodes,
                                           "n_pairs": len(pairs),
                                           "n_chains": len(chains)})
+    if trace:
+        strategy.meta["search_trace"] = _build_trace(
+            g, dev, evaluator, matches, pairs, chains, chain_traces,
+            eltwise_trace, horizontal_trace, seg_costs, h_cost_of, strategy)
     # provenance: which cost oracle picked this strategy.  A profile-guided
     # evaluator (tune.CalibratedEvaluator) carries its DeviceProfile; the hash
     # flows into the compiled artifact so a loaded plan knows what it was
@@ -326,6 +417,97 @@ def naive(g: XGraph, dev: DeviceModel, evaluator=None, device_of=None) -> Strate
     host_nodes = [n.name for n in g if n.op != "input" and n.name not in set(plannable)]
     return Strategy(groups=groups, horizontal=[], cost=total,
                     meta={"host_nodes": host_nodes})
+
+
+# ----------------------------------------------------------------- trace
+def _build_trace(g, dev, evaluator, matches, pairs, chains, chain_traces,
+                 eltwise_trace, horizontal_trace, seg_costs, h_cost_of,
+                 strategy) -> dict:
+    """Assemble the bounded, JSON-native search trace for strategy.meta.
+
+    The trace answers three questions the final Strategy alone cannot: which
+    fusion candidates were *considered* (scored alternatives with their costs),
+    which were *rejected* and why (machine-readable reasons), and how the two
+    barrier heuristics (eltwise absorb, horizontal fusion) decided.  When the
+    evaluator is profile-guided, each final group also carries the analytic
+    Eq. 5/6 prediction next to the calibrated one, so calibration influence
+    stays visible per decision."""
+    from repro.core.lower import tile_key
+
+    chosen_keys = {tuple(grp) for grp in strategy.groups}
+    chain_records = []
+    for ct in chain_traces:
+        if "nodes" not in ct:       # collector allocated but chain never solved
+            continue
+        alternatives = sorted(
+            ((seg, c) for seg, c in ct["scored"]
+             if tuple(seg) not in chosen_keys),
+            key=lambda sc: sc[1])[:TRACE_MAX_ALTERNATIVES]
+        reasons: dict[str, int] = {}
+        examples: list[dict] = []
+        for seg, why in ct["rejected"]:
+            reasons[why] = reasons.get(why, 0) + 1
+            if len(examples) < TRACE_MAX_REJECT_EXAMPLES:
+                examples.append({"nodes": list(seg), "reason": why})
+        chain_records.append({
+            "nodes": list(ct["nodes"]),
+            "m": ct.get("m", len(ct["nodes"])),
+            # frontier: how many candidate segments survived template matching
+            # and the tiling-feasibility probe for this chain's Floyd matrix
+            "frontier": ct.get("n_feasible_segments", 0),
+            "cost_s": ct.get("cost"),
+            "chosen": [{"nodes": list(s), "cost_s": seg_costs.get(tuple(s))}
+                       for s in ct.get("chosen", [])],
+            "alternatives": [{"nodes": list(s), "cost_s": c}
+                             for s, c in alternatives],
+            "n_rejected": reasons,
+            "rejected_examples": examples,
+        })
+
+    # final group costs (direct evaluator scores, pre-Floyd-relaxation) keyed
+    # the same way lowering/tiling key launches, so downstream consumers join
+    # trivially; plus the analytic comparison when search was profile-guided.
+    analytic = (evaluator if type(evaluator).__name__ == "AnalyticEvaluator"
+                else AnalyticEvaluator(g, dev))
+    group_costs: dict[str, dict] = {}
+    for grp in strategy.groups:
+        entry: dict = {"kind": "chain"}
+        c = seg_costs.get(tuple(grp))
+        if c is not None:
+            entry["cost_s"] = c
+        try:
+            a = analytic(list(grp))
+            entry["analytic_cost_s"] = a if math.isfinite(a) else None
+        except Exception:
+            entry["analytic_cost_s"] = None
+        group_costs[tile_key(grp)] = entry
+    for heads in strategy.horizontal:
+        entry = {"kind": "horizontal"}
+        c = h_cost_of.get(tuple(heads))
+        if c is not None:
+            entry["cost_s"] = c
+        try:
+            a = analytic.horizontal_cost(list(heads))
+            entry["analytic_cost_s"] = a if math.isfinite(a) else None
+        except Exception:
+            entry["analytic_cost_s"] = None
+        group_costs[tile_key(heads)] = entry
+
+    return {
+        "evaluator": type(evaluator).__name__,
+        "templates": {t.name: len(embs) for t, embs in matches.items()},
+        "n_fusable_pairs": len(pairs),
+        "n_chains": len(chains),
+        "n_chains_recorded": len(chain_records),
+        "chains": chain_records,
+        "eltwise_absorb": eltwise_trace,
+        "horizontal": horizontal_trace,
+        "group_costs": group_costs,
+        "total_cost_s": strategy.cost,
+        "bounds": {"max_chains": TRACE_MAX_CHAINS,
+                   "max_alternatives": TRACE_MAX_ALTERNATIVES,
+                   "max_reject_examples": TRACE_MAX_REJECT_EXAMPLES},
+    }
 
 
 # ----------------------------------------------------------------- helpers

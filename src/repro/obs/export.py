@@ -300,11 +300,15 @@ class ObsHTTPServer:
 
     Serves the shared (or given) registry/flight-recorder/event-log:
     ``/metrics`` OpenMetrics text, ``/flight`` JSON, ``/events`` JSON Lines,
-    ``/snapshot`` one combined JSON document.  ``port=0`` binds an ephemeral
-    port (read it back from ``.port``); ``close()`` joins the thread."""
+    ``/snapshot`` one combined JSON document, ``/explain`` the registered
+    compile-report providers (``/explain`` lists models; ``/explain/<model>``
+    returns that model's CompileReport as JSON — see ``add_explain``).
+    ``port=0`` binds an ephemeral port (read it back from ``.port``);
+    ``close()`` joins the thread."""
 
     def __init__(self, registry=None, *, flight=None, events=None,
-                 tracer=None, host: str = "127.0.0.1", port: int = 0):
+                 tracer=None, explain=None, host: str = "127.0.0.1",
+                 port: int = 0):
         from repro.obs import metrics as obs_metrics
         from repro.obs import trace as obs_trace
         from repro.obs.events import EVENTS
@@ -314,6 +318,10 @@ class ObsHTTPServer:
         self.flight = flight
         self.events = events if events is not None else EVENTS
         self.tracer = tracer if tracer is not None else obs_trace.TRACER
+        # model name -> zero-arg callable returning a JSON-safe CompileReport
+        # (``Session.explain`` bound by the serving layer; lazy so each scrape
+        # sees the CURRENT report — after a hot-swap the route follows)
+        self._explain: dict = dict(explain or {})
         plane = self
 
         class Handler(BaseHTTPRequestHandler):
@@ -347,6 +355,25 @@ class ObsHTTPServer:
                     elif path == "/snapshot":
                         self._send(json.dumps(plane.snapshot(), default=str),
                                    "application/json")
+                    elif path == "/explain" or path == "/explain/":
+                        self._send(json.dumps(
+                            {"models": sorted(plane._explain)}),
+                            "application/json")
+                    elif path.startswith("/explain/"):
+                        model = path[len("/explain/"):]
+                        fn = plane._explain.get(model)
+                        if fn is None:
+                            self._send(
+                                json.dumps({"error": f"unknown model "
+                                                     f"{model!r}",
+                                            "models": sorted(plane._explain)}),
+                                "application/json", 404)
+                        else:
+                            plane.registry.counter(
+                                "obs.explain_scrapes",
+                                {"model": model}).inc()
+                            self._send(json.dumps(fn(), default=str),
+                                       "application/json")
                     else:
                         self._send("not found\n", "text/plain", 404)
                 except Exception as e:       # surface, don't kill the thread
@@ -358,6 +385,16 @@ class ObsHTTPServer:
         self._thread = threading.Thread(target=self._httpd.serve_forever,
                                         name="dnnvm-obs-http", daemon=True)
         self._thread.start()
+
+    def add_explain(self, model: str, provider) -> None:
+        """Register (or replace) the ``/explain/<model>`` provider: a
+        zero-arg callable returning the model's current CompileReport dict
+        (typically ``session.explain`` — re-evaluated per scrape, so a
+        hot-swapped artifact explains its new plan immediately)."""
+        self._explain[model] = provider
+
+    def remove_explain(self, model: str) -> None:
+        self._explain.pop(model, None)
 
     def url(self, path: str = "/metrics") -> str:
         return f"http://{self.host}:{self.port}{path}"

@@ -157,11 +157,15 @@ class MultiServer:
                           message=f"model {name!r} admitted "
                                   f"({need} B DDR, class {slo})",
                           ddr_bytes=need, ddr_base=used)
+        if self._obs_http is not None:
+            self._obs_http.add_explain(name, session.explain)
         return server
 
     def remove_model(self, name: str, wait: bool = True) -> None:
         m = self._models.pop(name)
         m["server"].close(wait=wait)
+        if self._obs_http is not None:
+            self._obs_http.remove_explain(name)
         self._events.emit("tenant.remove", model=name,
                           message=f"model {name!r} removed")
         # re-pack the partition: survivors keep their order, bases close up
@@ -249,13 +253,17 @@ class MultiServer:
         """Mount the OpenMetrics scrape endpoint for the whole host: every
         tenant's labelled series, the shared flight recorder, and the event
         log behind one ``/metrics`` (+ ``/flight``, ``/events``,
-        ``/snapshot``).  Returns the running
+        ``/snapshot``, per-tenant ``/explain/<model>``).  Returns the running
         :class:`~repro.obs.export.ObsHTTPServer`; closed with the host."""
         from repro.obs.export import ObsHTTPServer
         if self._obs_http is None:
             self._obs_http = ObsHTTPServer(
                 self._registry, flight=self.flight, events=self._events,
                 host=host, port=port)
+        # (re)register every resident tenant's explain provider — models
+        # admitted after the endpoint came up are picked up on the next call
+        for name, m in self._models.items():
+            self._obs_http.add_explain(name, m["session"].explain)
         return self._obs_http
 
     def close(self, wait: bool = True) -> None:

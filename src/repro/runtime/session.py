@@ -186,6 +186,46 @@ class Session:
                                profile=(profile if profile is not None
                                         else self.profile))
 
+    # --------------------------------------------------------------- explain
+    def explain(self, *, render: bool = False):
+        """This session's compile-decision provenance, joined with live drift.
+
+        Returns the artifact's ``CompileReport`` (``repro.explain``) extended
+        with a ``drift`` section when a :class:`~repro.obs.drift.DriftProfiler`
+        is attached and has samples: per-unit measured-vs-predicted seconds —
+        the static plan's predictions next to what this deployment actually
+        measures.  ``render=True`` returns the text rendering instead."""
+        from repro.explain import render_report, report_of
+        from repro.obs.events import EVENTS
+
+        rep = dict(report_of(self.artifact))
+        drift_rows = None
+        if self.drift is not None:
+            dr = self.drift.report()
+            drift_rows = [{
+                "key": u.key.replace("+", "|"),
+                "kind": u.kind,
+                "predicted": u.predicted,
+                "measured": u.measured,
+                "deviation": u.deviation,
+                "n_samples": u.n_samples,
+            } for u in dr.units]
+            rep["drift"] = {
+                "units": drift_rows,
+                "drifted": bool(dr.drifted),
+                "aggregate_deviation": dr.aggregate,
+                "profile_match": dr.profile_match,
+            }
+        EVENTS.emit("explain.report",
+                    message=f"explain {rep['model']} (session"
+                            f"{', with drift' if drift_rows else ''})",
+                    model=rep["model"], device=rep["device"],
+                    degraded=rep.get("degraded", False),
+                    n_drift_units=len(drift_rows or []))
+        if render:
+            return render_report(rep, drift=drift_rows)
+        return rep
+
     # -------------------------------------------------------------- serving
     def serve(self, **kw):
         from repro.runtime.server import Server

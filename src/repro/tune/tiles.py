@@ -239,6 +239,7 @@ def _search_tile_shapes(g: XGraph, qm, dev: DeviceModel, strategy, *,
             if keep:
                 chosen[lower.tile_key(item.nodes)] = [int(v) for v in win_s]
             provenance.append({
+                "key": lower.tile_key(item.nodes),
                 "nodes": list(item.nodes), "kind": item.kind,
                 "default": list(default),
                 "chosen": list(win_s) if keep else None,
@@ -260,6 +261,7 @@ def _search_tile_shapes(g: XGraph, qm, dev: DeviceModel, strategy, *,
             if keep:
                 chosen[lower.tile_key(item.nodes)] = [int(v) for v in win]
             provenance.append({
+                "key": lower.tile_key(item.nodes),
                 "nodes": list(item.nodes), "kind": item.kind,
                 "default": list(default),
                 "chosen": list(win) if keep else None,

@@ -1,0 +1,38 @@
+"""Regenerate tests/data/explain_golden.txt — the committed expectation the
+golden-output renderer test diffs against byte-for-byte.
+
+Run from the repo root after an *intentional* renderer or report change:
+
+    PYTHONPATH=src:tests python tests/data/gen_explain_golden.py
+
+It compiles exactly the fixture tests/test_explain.py uses (seeded toy
+resnet, analytic search on zu2) and renders its embedded CompileReport.
+"""
+import os
+
+import numpy as np
+
+
+def main():
+    from conftest import make_toy_resnet_graph, toy_params
+    from repro import asm, hw
+    from repro.core import executor, pathsearch, quantize
+    from repro.explain import render_report
+
+    g = make_toy_resnet_graph()
+    params = toy_params(g)
+    x = np.random.default_rng(0).standard_normal(
+        g.shape("data")).astype(np.float32)
+    qm = quantize.calibrate(g, params, x, executor.run_float)
+    dev = hw.get_device("zu2")
+    s = pathsearch.search(g, dev)
+    art = asm.compile_strategy(g, s, dev, qm)
+
+    out = os.path.join(os.path.dirname(__file__), "explain_golden.txt")
+    with open(out, "w") as f:
+        f.write(render_report(art.report))
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()
