@@ -3,7 +3,8 @@ export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: verify test ci test-multidevice dev-deps bench-table3 serve-smoke \
         tune-smoke bench-tune tile-smoke bench-tile obs-smoke bench-obs \
-        zoo-smoke bench-zoo explain-smoke bench-explain examples-smoke
+        zoo-smoke bench-zoo explain-smoke bench-explain examples-smoke \
+        fleet-smoke bench-fleet
 
 dev-deps:
 	$(PY) -m pip install -r requirements-dev.txt
@@ -23,7 +24,7 @@ test:
 # cores; on throttled 2-core CI boxes it can exceed any sane wall budget, so
 # it gates separately (make test-multidevice).
 ci: dev-deps serve-smoke tune-smoke tile-smoke obs-smoke zoo-smoke \
-    explain-smoke examples-smoke
+    explain-smoke fleet-smoke examples-smoke
 	$(PY) -m pytest -q --ignore=tests/test_multidevice.py
 
 test-multidevice:
@@ -111,6 +112,23 @@ explain-smoke:
 bench-explain:
 	$(PY) benchmarks/explain_bench.py --model vgg16 --model resnet50 \
 	    --model googlenet --json explain_bench.json
+
+# Fault-tolerant fleet acceptance (ISSUE 10): serve googlenet@32 through a
+# replicated Fleet on forced-host devices and gate the chaos harness —
+# 2 replicas >= 1.7x one replica under a uniform injected launch cost,
+# kill-a-replica mid-stream completes every request bit-exact (ZERO drops)
+# with the eviction, retries, frozen flight dump, and post-heal re-admission
+# all observable on the obs plane, and a tiny queue bound sheds load via
+# AdmissionError instead of wedging.  Bench JSON + flight dumps land in
+# benchmarks/out/ (CI build artifacts).
+fleet-smoke:
+	$(PY) benchmarks/fleet_bench.py --model googlenet --img 32 \
+	    --requests 32 --replicas 2 --smoke --json fleet_bench.json
+
+# Full fleet benchmark: more traffic, best-of-3 scaling trials.
+bench-fleet:
+	$(PY) benchmarks/fleet_bench.py --requests 64 --repeats 3 \
+	    --json fleet_bench.json
 
 # The README quickstarts must keep running: both examples at small
 # resolution (documentation that executes is documentation that's true).

@@ -11,6 +11,7 @@ quantization metadata, memory-plan summary — into a single serializable
 repeated serving requests reload plans instead of recompiling.
 """
 from repro.asm.artifact import (
+    ArtifactError,
     CompiledArtifact,
     PlanCache,
     PlanResult,
@@ -27,7 +28,8 @@ from repro.asm.artifact import (
 )
 
 __all__ = [
-    "CompiledArtifact", "PlanCache", "PlanResult", "PLAN_CACHE",
+    "ArtifactError", "CompiledArtifact", "PlanCache", "PlanResult",
+    "PLAN_CACHE",
     "assemble_artifact", "compile_strategy", "device_of_artifact",
     "graph_signature", "load_artifact", "plan_strategy", "quant_signature",
     "save_artifact", "strategy_signature",

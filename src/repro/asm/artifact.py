@@ -21,6 +21,7 @@ from __future__ import annotations
 import dataclasses
 import hashlib
 import json
+import zipfile
 
 import numpy as np
 
@@ -209,6 +210,15 @@ def bounded_tile_provenance(prov, *,
 
 
 # -------------------------------------------------------------------- artifact
+class ArtifactError(ValueError):
+    """A persisted artifact could not be loaded: missing or truncated npz,
+    garbage bytes, tampered/incomplete metadata, or an unloadable format
+    version.  Subclasses :class:`ValueError` so pre-existing callers that
+    guarded version mismatches with ``except ValueError`` keep working;
+    new callers (the zoo, the fleet) catch this to distinguish a corrupt
+    store entry from a programming error."""
+
+
 @dataclasses.dataclass
 class CompiledArtifact:
     graph_sig: str
@@ -302,6 +312,17 @@ class CompiledArtifact:
         on this artifact (seeds the plan cache; no recompilation)."""
         from repro.runtime import Session
         return Session.from_artifact(self, backend=backend, **kw)
+
+    # ------------------------------------------------------------ round trip
+    def save(self, path: str) -> None:
+        """Persist as one DNNVM object file (see :func:`save_artifact`)."""
+        save_artifact(self, path)
+
+    @classmethod
+    def load(cls, path: str) -> "CompiledArtifact":
+        """Load a DNNVM object file; raises :class:`ArtifactError` on any
+        corrupt/truncated/tampered input (see :func:`load_artifact`)."""
+        return load_artifact(path)
 
 
 # ----------------------------------------------------------------- compilation
@@ -520,11 +541,36 @@ def save_artifact(art: CompiledArtifact, path: str) -> None:
 
 
 def load_artifact(path: str) -> CompiledArtifact:
+    """Load one DNNVM object file.
+
+    Any way the file can be bad — not an npz at all, truncated mid-archive,
+    a missing/garbled ``meta_json`` block, metadata referencing arrays that
+    are not in the archive, or an unloadable format version — raises
+    :class:`ArtifactError` naming the path and the cause, never a raw
+    ``zipfile``/``KeyError``/decoder exception from the guts of the reader.
+    ``FileNotFoundError`` stays ``FileNotFoundError`` (a missing file is an
+    addressing mistake, not corruption)."""
+    try:
+        return _load_artifact(path)
+    except (ArtifactError, FileNotFoundError, IsADirectoryError):
+        raise
+    except (zipfile.BadZipFile, KeyError, IndexError, TypeError, ValueError,
+            EOFError, OSError, json.JSONDecodeError) as e:
+        raise ArtifactError(
+            f"corrupt artifact {path!r}: {type(e).__name__}: {e}") from e
+
+
+def _load_artifact(path: str) -> CompiledArtifact:
     with np.load(path, allow_pickle=False) as z:
         meta = json.loads(str(z["meta_json"]))
+        if not isinstance(meta, dict) or "format_version" not in meta:
+            raise ArtifactError(
+                f"corrupt artifact {path!r}: metadata block is not an "
+                f"artifact header")
         if meta["format_version"] not in _LOADABLE_VERSIONS:
-            raise ValueError(f"artifact format {meta['format_version']} not "
-                             f"in {_LOADABLE_VERSIONS}")
+            raise ArtifactError(
+                f"artifact {path!r}: format {meta['format_version']} not "
+                f"in {_LOADABLE_VERSIONS}")
         fields = z["instr_fields"]
         deps_flat = z["deps_flat"]
         deps_off = z["deps_off"]

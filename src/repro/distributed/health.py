@@ -36,6 +36,12 @@ class HeartbeatMonitor:
             a = 0.2 if st.step_ema else 1.0
             st.step_ema = (1 - a) * st.step_ema + a * step_time_s
 
+    def forget(self, host: str) -> None:
+        """Drop a host's state entirely.  An evicted replica must leave the
+        fleet's statistics — its stale EWMA would otherwise skew the straggler
+        median and its stale beat would keep re-reporting it dead."""
+        self.hosts.pop(host, None)
+
     def dead(self) -> list[str]:
         now = self.clock()
         return [h for h, s in self.hosts.items()

@@ -12,12 +12,21 @@ host-side layer that feeds the accelerator:
 * :class:`Server`          — Session + batcher + latency/batch metrics.
 * :class:`MultiServer`     — many models on one device: DDR partitioning,
                              per-tenant SLO classes, admission control.
+* :class:`Fleet`           — N data-parallel Session replicas across
+                             ``jax.devices()``: health-driven failover,
+                             bounded retries, elastic re-admission.
+* :class:`ChaosInjector`   — deterministic fault injection (kill / poison /
+                             hang / slow) on fleet replicas, for the chaos
+                             gate.
 * :func:`pipeline_report`  — engine-level cross-request schedule: the
                              artifact's addressed instruction stream,
                              software-pipelined across requests on the time
                              wheel and audited by the memory-hazard oracle.
 """
 from repro.runtime.batching import BatcherClosed, DynamicBatcher
+from repro.runtime.chaos import ChaosError, ChaosInjector
+from repro.runtime.fleet import (DeadlineExceeded, Fleet, FleetError,
+                                 RetriesExhausted)
 from repro.runtime.multitenant import (SLO_CLASSES, AdmissionError,
                                        MultiServer)
 from repro.runtime.schedule import (PipelineReport, pipeline_report,
@@ -25,6 +34,7 @@ from repro.runtime.schedule import (PipelineReport, pipeline_report,
 from repro.runtime.server import Server
 from repro.runtime.session import Session
 
-__all__ = ["AdmissionError", "BatcherClosed", "DynamicBatcher", "MultiServer",
-           "PipelineReport", "SLO_CLASSES", "Server", "Session",
-           "pipeline_report", "pipeline_stream"]
+__all__ = ["AdmissionError", "BatcherClosed", "ChaosError", "ChaosInjector",
+           "DeadlineExceeded", "DynamicBatcher", "Fleet", "FleetError",
+           "MultiServer", "PipelineReport", "RetriesExhausted", "SLO_CLASSES",
+           "Server", "Session", "pipeline_report", "pipeline_stream"]

@@ -126,14 +126,16 @@ class DynamicBatcher:
             self.max_batch = n
             self._cv.notify_all()
 
-    def close(self, wait: bool = True) -> None:
+    def close(self, wait: bool = True, timeout_s: float | None = None) -> None:
         """Flush whatever is queued, then stop the worker.  Idempotent; with
-        an empty queue this returns as soon as the worker observes the flag."""
+        an empty queue this returns as soon as the worker observes the flag.
+        ``timeout_s`` bounds the join (the fleet closes possibly-wedged
+        replicas without hanging its own shutdown)."""
         with self._cv:
             self._closed = True
             self._cv.notify_all()
         if wait:
-            self._worker.join()
+            self._worker.join(timeout=timeout_s)
 
     def __enter__(self):
         return self

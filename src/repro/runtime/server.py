@@ -86,13 +86,17 @@ class Server:
 
     def _warmup(self) -> None:
         """Trace every allowed batch shape once so steady-state serving never
-        pays jit compilation inside a latency-sensitive flush.  Goes straight
-        to the executor: warmup must not count as served traffic in the
-        session's stats."""
+        pays jit compilation inside a latency-sensitive flush.  Uses the
+        session's launch path (NOT the bare executor) so the compile happens
+        under the same device-placement context as serving — jit caches key
+        on ``jax.default_device``, so warming up outside a replica's
+        placement would recompile on the first real batch.  Warmup still
+        must not count as served traffic in the session's stats (``_launch``
+        bumps no counters)."""
         shape = self.session.graph.shape(
             next(n.name for n in self.session.graph if n.op == "input"))
         for s in self.allowed_sizes:
-            self.session.executor(np.zeros((s,) + tuple(shape[1:]), np.int8))
+            self.session._launch(np.zeros((s,) + tuple(shape[1:]), np.int8))
 
     def _pad_size(self, n: int) -> int:
         for s in self.allowed_sizes:
@@ -199,6 +203,12 @@ class Server:
     def submit(self, x):
         return self._batcher.submit(x)   # the batcher timestamps + records
 
+    @property
+    def pending(self) -> int:
+        """Requests queued but not yet formed into a batch (the admission
+        and fleet-routing signal)."""
+        return self._batcher.pending
+
     def serve_metrics(self, host: str = "127.0.0.1", port: int = 0):
         """Mount the OpenMetrics scrape endpoint (plus /flight, /events,
         /snapshot, /explain) for this server's plane; returns the running
@@ -215,8 +225,8 @@ class Server:
             self._obs_http.add_explain(model, self.session.explain)
         return self._obs_http
 
-    def close(self, wait: bool = True) -> None:
-        self._batcher.close(wait=wait)
+    def close(self, wait: bool = True, timeout_s: float | None = None) -> None:
+        self._batcher.close(wait=wait, timeout_s=timeout_s)
         if self._obs_http is not None:
             self._obs_http.close()
             self._obs_http = None

@@ -36,14 +36,16 @@ class Session:
     def __init__(self, g, strategy, dev, qm, *, backend: str = "ref",
                  cache=None, interpret: bool = True, profile=None,
                  pin_input: bool | None = None,
-                 cache_max_entries: int | None = None):
+                 cache_max_entries: int | None = None, placement=None):
         """``profile`` names the calibrated device profile to compile under —
         a ``tune.DeviceProfile``, a profile name/path resolved through the
         on-disk ``tune.ProfileCache``, or None (the analytic model; a
         strategy picked by a profile-guided search still keys by the profile
         hash it carries).  ``pin_input`` forwards to the memory planner.
         ``cache_max_entries`` rebounds the plan cache this session compiles
-        through (a multi-model host sets it once to cap resident artifacts)."""
+        through (a multi-model host sets it once to cap resident artifacts).
+        ``placement`` pins every launch to one ``jax.Device`` (the fleet
+        layer places data-parallel replicas across ``jax.devices()``)."""
         from repro import asm
         from repro.core.executor import Int8Executor
 
@@ -62,11 +64,14 @@ class Session:
         self.n_runs = 0
         self.images_served = 0
         self.drift = None               # optional DriftProfiler (attach_drift)
+        self.placement = placement      # optional jax.Device to launch on
+        self._launch_hook = None        # optional pre-launch hook (chaos)
 
     @classmethod
     def from_artifact(cls, art, *, backend: str = "ref", cache=None,
                       interpret: bool = True, profile=None,
-                      cache_max_entries: int | None = None) -> "Session":
+                      cache_max_entries: int | None = None,
+                      placement=None) -> "Session":
         """Open a session on a loaded DNNVM object file — no recompilation:
         the artifact is seeded into the plan cache under its own key.
 
@@ -101,7 +106,7 @@ class Session:
         cache.put(g, art, dev, art, qm=qm, profile=resolved)
         return cls(g, art, dev, qm, backend=backend, cache=cache,
                    interpret=interpret, profile=resolved,
-                   cache_max_entries=cache_max_entries)
+                   cache_max_entries=cache_max_entries, placement=placement)
 
     # ------------------------------------------------------------- execution
     def _stack(self, xs, pad_to: int | None = None):
@@ -120,6 +125,27 @@ class Session:
         """Attach an ``obs.DriftProfiler``; every ``run``/``run_batch`` then
         counts as one observed launch (the profiler samples every Nth)."""
         self.drift = profiler
+
+    def set_launch_hook(self, fn) -> None:
+        """Install (or with None, clear) a pre-launch hook: called with the
+        stacked input batch immediately before every executor launch.  An
+        exception raised here fails the launch exactly as an executor fault
+        would — the seam the chaos injector (``runtime.chaos``) uses to kill,
+        hang, slow, or poison one replica deterministically."""
+        self._launch_hook = fn
+
+    def _launch(self, x):
+        """One executor launch, through the hook and onto the placement
+        device (``jax.default_device``; a no-op for the numpy ref backend's
+        compute, but keeps any jax arrays the launch creates on the replica's
+        device)."""
+        if self._launch_hook is not None:
+            self._launch_hook(x)
+        if self.placement is None:
+            return self.executor(x)
+        import jax
+        with jax.default_device(self.placement):
+            return self.executor(x)
 
     def drift_state(self) -> dict | None:
         """The attached profiler's most recent summary (None when no drift
@@ -148,7 +174,7 @@ class Session:
     def run(self, x) -> dict:
         """One request; accepts (H, W, C) or (1, H, W, C) int8."""
         x = np.asarray(x)
-        out = self.executor(x[None] if x.ndim == 3 else x)
+        out = self._launch(x[None] if x.ndim == 3 else x)
         self.n_runs += 1
         self.images_served += 1
         if self.drift is not None:
@@ -165,7 +191,7 @@ class Session:
             x, n = self._stack(xs, pad_to=pad_to)
         with TRACER.span("launch", cat="serve", track="batch",
                          batch=int(x.shape[0])):
-            out = self.executor(x)
+            out = self._launch(x)
         self.n_runs += 1
         self.images_served += n
         if self.drift is not None:

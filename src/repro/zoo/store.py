@@ -15,6 +15,14 @@ the artifact npz (``asm.save_artifact``) and the on-disk ``tune.ProfileCache``
   finds the artifact before any search runs;
 * **atomic**: npz + sidecar JSON are written to a temp name and
   ``os.replace``d — a crashed writer leaves no half-entry visible;
+* **cross-process safe**: writers (put / evict / remove, and get's index
+  refresh) serialize on an advisory ``flock`` over ``<root>/.lock``, so
+  concurrent processes shelving into one zoo cannot interleave a
+  read-modify-write of the sidecar index or evict an entry mid-put;
+* **corruption-hardened**: a truncated or garbage npz, or a sidecar whose
+  recorded key disagrees with its filename, raises a clear
+  :class:`~repro.asm.artifact.ArtifactError` naming the entry — never a raw
+  ``zipfile``/``KeyError`` from the reader's guts;
 * **bounded**: ``evict`` trims least-recently-*used* entries past
   ``max_entries`` / ``max_bytes`` (both optional), mirroring ``PlanCache``'s
   LRU discipline on disk.
@@ -24,11 +32,17 @@ index record).  Default root: ``$DNNVM_ZOO`` or ``~/.cache/dnnvm/zoo``.
 """
 from __future__ import annotations
 
+import contextlib
 import json
 import os
 import time
 
 from repro import asm
+
+try:                                    # POSIX advisory locking; the zoo
+    import fcntl                        # degrades to in-process-only safety
+except ImportError:                     # where it's unavailable
+    fcntl = None
 
 
 def _registry():
@@ -63,64 +77,104 @@ class ModelZoo:
     def _meta(self, key: str) -> str:
         return os.path.join(self.root, key + ".json")
 
+    # --------------------------------------------------------------- locking
+    @contextlib.contextmanager
+    def _locked(self):
+        """Advisory cross-process writer lock over the whole store
+        (``flock`` on ``<root>/.lock``).  NOT re-entrant — internal callers
+        already under the lock use the ``_evict``/``_remove`` forms; a second
+        ``flock`` on a fresh fd of the same file would deadlock the
+        process against itself."""
+        os.makedirs(self.root, exist_ok=True)
+        if fcntl is None:
+            yield
+            return
+        with open(os.path.join(self.root, ".lock"), "a+") as fh:
+            fcntl.flock(fh.fileno(), fcntl.LOCK_EX)
+            try:
+                yield
+            finally:
+                fcntl.flock(fh.fileno(), fcntl.LOCK_UN)
+
     # ---------------------------------------------------------------- write
     def put(self, art, *, name: str | None = None,
             source_key: str | None = None) -> str:
         """Shelve an artifact under its content address (atomic; idempotent —
-        re-putting existing content only refreshes the index record)."""
+        re-putting existing content only refreshes the index record;
+        concurrent writers serialize on the store lock)."""
         key = self.key_for(art)
-        os.makedirs(self.root, exist_ok=True)
-        npz = self._npz(key)
-        fresh = not os.path.exists(npz)
-        if fresh:
-            tmp = npz + f".tmp-{os.getpid()}"
-            try:
-                asm.save_artifact(art, tmp)
-                os.replace(tmp, npz)
-            finally:
-                if os.path.exists(tmp):
-                    os.unlink(tmp)
-        rec = self._read_meta(key) or {
-            "key": key, "created": time.time(), "n_opens": 0}
-        rec.update({
-            "name": name or rec.get("name") or art.meta.get("graph_name"),
-            "graph_name": art.meta.get("graph_name"),
-            "device": art.device,
-            "format_version": asm.artifact.FORMAT_VERSION,
-            "profile_hash": art.profile_hash,
-            "pin_input": art.pin_input,
-            "fused_coverage": art.fused_coverage,
-            "peak_ddr_bytes": art.peak_ddr_bytes,
-            "size_bytes": os.path.getsize(npz),
-            "last_used": time.time(),
-        })
-        if source_key:
-            sources = set(rec.get("source_keys") or [])
-            sources.add(source_key)
-            rec["source_keys"] = sorted(sources)
-        self._write_meta(key, rec)
-        _registry().counter("zoo.puts").inc()
-        if fresh:
-            _events().emit("zoo.put", key=key[:16], model=name,
-                           size_bytes=rec["size_bytes"],
-                           message=f"shelved {name or key[:16]} "
-                                   f"({rec['size_bytes']} B)")
-            self.evict()
+        with self._locked():
+            npz = self._npz(key)
+            fresh = not os.path.exists(npz)
+            if fresh:
+                tmp = npz + f".tmp-{os.getpid()}"
+                try:
+                    asm.save_artifact(art, tmp)
+                    os.replace(tmp, npz)
+                finally:
+                    if os.path.exists(tmp):
+                        os.unlink(tmp)
+            rec = self._read_meta(key) or {
+                "key": key, "created": time.time(), "n_opens": 0}
+            rec.update({
+                "name": name or rec.get("name") or art.meta.get("graph_name"),
+                "graph_name": art.meta.get("graph_name"),
+                "device": art.device,
+                "format_version": asm.artifact.FORMAT_VERSION,
+                "profile_hash": art.profile_hash,
+                "pin_input": art.pin_input,
+                "fused_coverage": art.fused_coverage,
+                "peak_ddr_bytes": art.peak_ddr_bytes,
+                "size_bytes": os.path.getsize(npz),
+                "last_used": time.time(),
+            })
+            if source_key:
+                sources = set(rec.get("source_keys") or [])
+                sources.add(source_key)
+                rec["source_keys"] = sorted(sources)
+            self._write_meta(key, rec)
+            _registry().counter("zoo.puts").inc()
+            if fresh:
+                _events().emit("zoo.put", key=key[:16], model=name,
+                               size_bytes=rec["size_bytes"],
+                               message=f"shelved {name or key[:16]} "
+                                       f"({rec['size_bytes']} B)")
+                self._evict()
         return key
 
     # ----------------------------------------------------------------- read
     def get(self, key: str):
-        """Load one artifact by content address (None on a miss)."""
+        """Load one artifact by content address (None on a miss; a resident
+        but corrupt/tampered entry raises
+        :class:`~repro.asm.artifact.ArtifactError` naming the entry)."""
         npz = self._npz(key)
         if not os.path.exists(npz):
             _registry().counter("zoo.misses").inc()
             return None
-        art = asm.load_artifact(npz)
         rec = self._read_meta(key)
-        if rec is not None:
-            rec["last_used"] = time.time()
-            rec["n_opens"] = int(rec.get("n_opens", 0)) + 1
-            self._write_meta(key, rec)
+        if rec is not None and rec.get("key") not in (None, key):
+            _registry().counter("zoo.corrupt").inc()
+            raise asm.ArtifactError(
+                f"zoo entry {key!r} under {self.root!r}: sidecar records key "
+                f"{rec.get('key')!r} — tampered or misplaced index record")
+        try:
+            art = asm.load_artifact(npz)
+        except FileNotFoundError:        # concurrently evicted between the
+            _registry().counter("zoo.misses").inc()   # exists check + read
+            return None
+        except asm.ArtifactError as e:
+            _registry().counter("zoo.corrupt").inc()
+            _events().emit("zoo.corrupt", severity="error", key=key[:16],
+                           message=f"zoo entry {key[:16]} is corrupt: {e}")
+            raise asm.ArtifactError(
+                f"zoo entry {key!r} under {self.root!r} is corrupt "
+                f"(remove it with ModelZoo.remove): {e}") from e
+        with self._locked():
+            rec = self._read_meta(key)
+            if rec is not None:
+                rec["last_used"] = time.time()
+                rec["n_opens"] = int(rec.get("n_opens", 0)) + 1
+                self._write_meta(key, rec)
         _registry().counter("zoo.hits").inc()
         return art
 
@@ -161,6 +215,10 @@ class ModelZoo:
 
     # ---------------------------------------------------------------- evict
     def remove(self, key: str) -> bool:
+        with self._locked():
+            return self._remove(key)
+
+    def _remove(self, key: str) -> bool:
         found = False
         for path in (self._npz(key), self._meta(key)):
             if os.path.exists(path):
@@ -172,6 +230,11 @@ class ModelZoo:
               max_bytes: int | None = None) -> list[str]:
         """Trim least-recently-used entries past the given (or configured)
         bounds; returns the evicted keys."""
+        with self._locked():
+            return self._evict(max_entries, max_bytes)
+
+    def _evict(self, max_entries: int | None = None,
+               max_bytes: int | None = None) -> list[str]:
         max_entries = max_entries if max_entries is not None else \
             self.max_entries
         max_bytes = max_bytes if max_bytes is not None else self.max_bytes
@@ -185,7 +248,7 @@ class ModelZoo:
                 (max_bytes is not None and total > max_bytes)):
             victim = recs.pop(0)
             total -= int(victim.get("size_bytes", 0))
-            self.remove(victim["key"])
+            self._remove(victim["key"])
             evicted.append(victim["key"])
             _registry().counter("zoo.evictions").inc()
         if evicted:

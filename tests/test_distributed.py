@@ -1,0 +1,150 @@
+"""Fault-tolerance plumbing (ISSUE 10 satellite): the previously idle
+heartbeat/straggler detectors, the retry-budget policy and driver loop, and
+the elastic re-mesh shrink policy — all on injectable clocks, no sleeps."""
+import pytest
+
+from repro.distributed.elastic import plan_mesh, remesh
+from repro.distributed.health import (HeartbeatMonitor, RetryPolicy,
+                                      run_with_retries)
+
+
+class FakeClock:
+    def __init__(self, t=0.0):
+        self.t = t
+
+    def __call__(self):
+        return self.t
+
+    def advance(self, dt):
+        self.t += dt
+
+
+# ------------------------------------------------------------- heartbeats
+def test_heartbeat_timeout_and_revival():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(timeout_s=10.0, clock=clk)
+    mon.beat("a")
+    mon.beat("b")
+    clk.advance(9.0)
+    mon.beat("b")
+    assert mon.dead() == []
+    clk.advance(2.0)                    # a: 11s silent; b: 2s
+    assert mon.dead() == ["a"]
+    mon.beat("a")                       # a revives on its next beat
+    assert mon.dead() == []
+
+
+def test_heartbeat_forget_drops_all_state():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(timeout_s=1.0, clock=clk)
+    mon.beat("a", step_time_s=5.0)
+    clk.advance(100.0)
+    mon.forget("a")
+    assert mon.dead() == []             # no stale "still dead" re-reports
+    assert "a" not in mon.hosts
+    mon.forget("a")                     # idempotent on unknown hosts
+
+
+def test_step_ewma_first_beat_seeds_then_blends():
+    mon = HeartbeatMonitor(clock=FakeClock())
+    mon.beat("a", step_time_s=1.0)
+    assert mon.hosts["a"].step_ema == pytest.approx(1.0)   # a=1.0 seed
+    mon.beat("a", step_time_s=2.0)                          # 0.8*1 + 0.2*2
+    assert mon.hosts["a"].step_ema == pytest.approx(1.2)
+
+
+def test_straggler_needs_three_samples_and_beats_median():
+    mon = HeartbeatMonitor(clock=FakeClock())
+    mon.beat("a", step_time_s=1.0)
+    mon.beat("b", step_time_s=10.0)
+    assert mon.stragglers(1.5) == []    # < 3 EWMAs: not enough signal
+    mon.beat("c", step_time_s=1.0)
+    assert mon.stragglers(1.5) == ["b"]  # 10 > 1.5 x median(1, 1, 10)
+    assert mon.stragglers(20.0) == []    # factor is respected
+    # hosts that never reported a step time don't dilute the median
+    mon.beat("d")
+    assert mon.stragglers(1.5) == ["b"]
+
+
+# ----------------------------------------------------------- retry budget
+def test_retry_policy_window_prunes_old_restarts():
+    clk = FakeClock()
+    pol = RetryPolicy(max_restarts=2, window_s=100.0, clock=clk)
+    assert pol.should_retry()
+    pol.record()
+    pol.record()
+    assert not pol.should_retry()       # budget spent
+    clk.advance(101.0)                  # both restarts age out of the window
+    assert pol.should_retry()
+
+
+def test_run_with_retries_restores_latest_checkpoint():
+    clk = FakeClock()
+
+    class Store:
+        def __init__(self):
+            self.saved = None
+
+        def restore_latest(self, abstract_state, shardings=None):
+            return self.saved
+
+    store = Store()
+    attempts = []
+
+    def run_fn(state, start):
+        attempts.append((state, start))
+        if len(attempts) < 3:
+            store.saved = ({"w": len(attempts)}, 10 * len(attempts))
+            raise RuntimeError("host lost")
+        return state, True
+
+    pol = RetryPolicy(max_restarts=5, clock=clk)
+    state, done = run_with_retries(lambda: {"w": 0}, run_fn, store, pol,
+                                   abstract_state=None)
+    assert done and state == {"w": 2}
+    # cold start from scratch, then each retry resumes the latest checkpoint
+    assert attempts == [({"w": 0}, 0), ({"w": 1}, 10), ({"w": 2}, 20)]
+    assert len(pol.restarts) == 2
+
+
+def test_run_with_retries_exhausted_budget_raises():
+    class Store:
+        def restore_latest(self, abstract_state, shardings=None):
+            return None
+
+    def run_fn(state, start):
+        raise RuntimeError("always fails")
+
+    pol = RetryPolicy(max_restarts=1, clock=FakeClock())
+    with pytest.raises(RuntimeError, match="always fails"):
+        run_with_retries(lambda: {}, run_fn, Store(), pol,
+                         abstract_state=None)
+
+
+# ------------------------------------------------------------- elastic DP
+def test_plan_mesh_shrinks_data_axis_keeps_model_axis():
+    assert plan_mesh(64, model_size=16) == ((4, 16), ("data", "model"))
+    # a lost host shrinks DP to the largest multiple that still divides
+    assert plan_mesh(63, model_size=16) == ((3, 16), ("data", "model"))
+    assert plan_mesh(16, model_size=16) == ((1, 16), ("data", "model"))
+
+
+def test_plan_mesh_pod_split_only_when_wide_and_even():
+    shape, axes = plan_mesh(1024, model_size=16)
+    assert shape == (2, 32, 16) and axes == ("pod", "data", "model")
+    # prefer_pods off, or a DP degree below the pod threshold, stays flat
+    assert plan_mesh(1024, model_size=16, prefer_pods=False)[0] == (64, 16)
+    assert plan_mesh(256, model_size=16)[0] == (16, 16)
+
+
+def test_plan_mesh_refuses_to_break_tensor_parallel():
+    with pytest.raises(ValueError, match="cannot keep TP=16"):
+        plan_mesh(8, model_size=16)
+
+
+def test_remesh_on_local_devices():
+    import jax
+    devs = jax.devices()[:1]            # one survivor: the smallest re-mesh
+    mesh = remesh(devs, model_size=1)
+    assert mesh.axis_names == ("data", "model")
+    assert mesh.devices.shape == (1, 1)

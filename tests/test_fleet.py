@@ -1,0 +1,295 @@
+"""Serving fleet (ISSUE 10 tentpole): replicated Sessions, health-driven
+failover under injected chaos (kill / poison / hang / straggle), bounded
+retries with duplicate suppression, load shedding, and elastic re-admission
+after the warmup probe."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro import asm
+from repro.core import executor, pathsearch, quantize
+from repro.hw import ZU2
+from repro.obs.events import EventLog
+from repro.obs.metrics import MetricsRegistry
+from repro.runtime import (AdmissionError, ChaosError, ChaosInjector,
+                           DeadlineExceeded, Fleet, Session)
+from tests.conftest import make_toy_resnet_graph, toy_params
+
+
+@pytest.fixture(scope="module")
+def toy_artifact():
+    g = make_toy_resnet_graph()
+    params = toy_params(g)
+    x = np.random.default_rng(0).standard_normal(
+        g.shape("data")).astype(np.float32)
+    qm = quantize.calibrate(g, params, x, executor.run_float)
+    s = pathsearch.search(g, ZU2)
+    return asm.compile_strategy(g, s, ZU2, qm=qm)
+
+
+@pytest.fixture(scope="module")
+def oracle(toy_artifact):
+    """Single-session bit-exactness reference + the request inputs."""
+    sess = Session.from_artifact(toy_artifact)
+    g = sess.graph
+    rng = np.random.default_rng(7)
+    xs = [rng.integers(-128, 128, g.shape("data")[1:],
+                       np.int64).astype(np.int8) for _ in range(24)]
+    return xs, [sess.run(x) for x in xs]
+
+
+def make_fleet(art, n=2, **kw):
+    """A fleet with test-speed knobs (fresh registry/event log per test so
+    counter asserts don't see other tests' traffic)."""
+    kw.setdefault("n_replicas", n)
+    kw.setdefault("check_interval_s", 0.01)
+    kw.setdefault("heartbeat_timeout_s", 0.5)
+    kw.setdefault("retry_backoff_s", 0.005)
+    kw.setdefault("attempt_timeout_s", 1.0)
+    kw.setdefault("probe_interval_s", 0.03)
+    kw.setdefault("probe_timeout_s", 2.0)
+    kw.setdefault("registry", MetricsRegistry())
+    kw.setdefault("events", EventLog())
+    kw.setdefault("server_kw", {"max_batch": 4, "max_latency_s": 1e-3})
+    return Fleet(art, **kw)
+
+
+def assert_bit_exact(got, want):
+    assert got is not None
+    for k in want:
+        np.testing.assert_array_equal(got[k], want[k])
+
+
+def wait_until(pred, timeout_s=8.0):
+    t0 = time.monotonic()
+    while time.monotonic() - t0 < timeout_s:
+        if pred():
+            return True
+        time.sleep(0.01)
+    return False
+
+
+# ----------------------------------------------------------------- healthy
+def test_fleet_serves_bit_exact_across_replicas(toy_artifact, oracle):
+    xs, wants = oracle
+    with make_fleet(toy_artifact, n=2) as fleet:
+        futs = [fleet.submit(x) for x in xs]
+        for fut, want in zip(futs, wants):
+            assert_bit_exact(fut.result(timeout=30), want)
+        st = fleet.stats()
+        assert st["completed"] == len(xs)
+        assert sorted(st["active"]) == ["r0", "r1"]
+        assert sum(r["n_served"] for r in st["replicas"].values()) >= len(xs)
+
+
+def test_fleet_single_replica_matches_session(toy_artifact, oracle):
+    xs, wants = oracle
+    with make_fleet(toy_artifact, n=1) as fleet:
+        for x, want in zip(xs[:6], wants[:6]):
+            assert_bit_exact(fleet.submit(x).result(timeout=30), want)
+
+
+# -------------------------------------------------------------------- chaos
+def test_kill_replica_failover_and_readmission(toy_artifact, oracle):
+    """The chaos gate in miniature: kill r1, every request still completes
+    bit-exact (retried on r0), r1 is evicted with an event + flight dump,
+    then healed and re-admitted after the warmup probe."""
+    xs, wants = oracle
+    fleet = make_fleet(toy_artifact, n=2)
+    chaos = ChaosInjector().attach(fleet)
+    try:
+        chaos.kill("r1")
+        futs = [fleet.submit(x) for x in xs]
+        for fut, want in zip(futs, wants):
+            assert_bit_exact(fut.result(timeout=30), want)
+        assert wait_until(lambda: "r1" not in fleet.active_replicas())
+        st = fleet.stats()
+        assert st["replicas"]["r1"]["state"] == "evicted"
+        assert st["retries"] >= 1 and chaos.fired("kill") >= 1
+        assert [e for e in fleet._events.records(kind="replica.evict")
+                if e.fields["replica"] == "r1"]
+        assert [e for e in fleet._events.records(kind="request.retry")]
+        assert fleet.flight.dumps(), "eviction must freeze a flight dump"
+        # heal -> warmup probe passes -> elastically re-admitted
+        chaos.heal("r1")
+        assert fleet.wait_active("r1", timeout_s=10)
+        assert fleet.stats()["replicas"]["r1"]["admissions"] >= 1
+        admits = [e for e in fleet._events.records(kind="replica.admit")
+                  if e.fields["replica"] == "r1"
+                  and not e.fields.get("initial")]
+        assert admits
+        # and traffic flows back through it bit-exactly
+        for x, want in zip(xs[:8], wants[:8]):
+            assert_bit_exact(fleet.submit(x).result(timeout=30), want)
+    finally:
+        chaos.heal_all()
+        fleet.close()
+
+
+def test_poison_one_launch_is_retried_transparently(toy_artifact, oracle):
+    """A single poisoned launch strikes the replica but stays below the
+    eviction threshold; its requests are retried and complete bit-exact."""
+    xs, wants = oracle
+    fleet = make_fleet(toy_artifact, n=2, max_consecutive_errors=3)
+    chaos = ChaosInjector().attach(fleet)
+    try:
+        chaos.poison("r0", n_launches=1)
+        chaos.poison("r1", n_launches=1)
+        futs = [fleet.submit(x) for x in xs]
+        for fut, want in zip(futs, wants):
+            assert_bit_exact(fut.result(timeout=30), want)
+        st = fleet.stats()
+        assert st["retries"] >= 1
+        assert chaos.fired("poison") == 2
+        assert sorted(st["active"]) == ["r0", "r1"]   # transient: no eviction
+    finally:
+        chaos.heal_all()
+        fleet.close()
+
+
+def test_hang_replica_attempt_timeout_drains_elsewhere(toy_artifact, oracle):
+    """A wedged replica answers nothing: its in-flight requests must time
+    out, drain to the survivor, and the late result (after heal) must be
+    duplicate-suppressed, not double-delivered."""
+    xs, wants = oracle
+    fleet = make_fleet(toy_artifact, n=2, attempt_timeout_s=0.3)
+    chaos = ChaosInjector().attach(fleet)
+    try:
+        chaos.hang("r1")
+        futs = [fleet.submit(x) for x in xs]
+        for fut, want in zip(futs, wants):
+            assert_bit_exact(fut.result(timeout=30), want)
+        st = fleet.stats()
+        assert st["completed"] == len(xs)
+        assert st["retries"] >= 1
+        # the hung replica eventually leaves the fleet one way or another
+        assert wait_until(lambda: "r1" not in fleet.active_replicas())
+    finally:
+        chaos.heal_all()
+        assert fleet.wait_active("r1", timeout_s=10)
+        fleet.close()
+
+
+def test_straggler_is_evicted(toy_artifact):
+    """Step-time EWMAs far beyond the fleet median trip the straggler
+    detector (driven directly through the monitor for determinism)."""
+    fleet = make_fleet(toy_artifact, n=3)
+    try:
+        for _ in range(4):
+            fleet.monitor.beat("r0", step_time_s=0.01)
+            fleet.monitor.beat("r1", step_time_s=0.01)
+            fleet.monitor.beat("r2", step_time_s=5.0)
+        # evictions is monotone (the healthy replica may be probed back in
+        # almost immediately, so don't race on the current state)
+        assert wait_until(lambda: fleet.replicas()["r2"].evictions >= 1)
+        evs = [e for e in fleet._events.records(kind="replica.evict")
+               if e.fields["replica"] == "r2"]
+        assert evs and evs[0].fields["reason"] == "straggler"
+    finally:
+        fleet.close()
+
+
+def test_deadline_exceeded_when_fleet_is_wedged(toy_artifact, oracle):
+    xs, _ = oracle
+    fleet = make_fleet(toy_artifact, n=1, request_deadline_s=0.3,
+                       attempt_timeout_s=10.0, max_retries=100)
+    chaos = ChaosInjector().attach(fleet)
+    try:
+        chaos.hang("r0")
+        fut = fleet.submit(xs[0])
+        with pytest.raises(DeadlineExceeded):
+            fut.result(timeout=30)
+        assert fleet.stats()["deadline_exceeded"] >= 1
+    finally:
+        chaos.heal_all()
+        fleet.close()
+
+
+# ----------------------------------------------------------- load shedding
+def test_fleet_sheds_load_past_queue_bound(toy_artifact, oracle):
+    xs, wants = oracle
+    fleet = make_fleet(toy_artifact, n=1, max_queue_per_replica=2)
+    chaos = ChaosInjector().attach(fleet)
+    try:
+        chaos.slow("r0", 0.05)
+        accepted, shed = [], 0
+        for x in xs:
+            try:
+                accepted.append((fleet.submit(x), x))
+            except AdmissionError:
+                shed += 1
+        assert shed >= 1, "queue bound must shed some of the burst"
+        assert accepted, "the bound must not shed everything"
+        by_x = {i: w for i, (x, w) in enumerate(zip(xs, wants))}
+        for fut, x in accepted:
+            want = next(w for i, w in by_x.items()
+                        if np.array_equal(xs[i], x))
+            assert_bit_exact(fut.result(timeout=30), want)
+        assert fleet.stats()["rejected"] == shed
+    finally:
+        chaos.heal_all()
+        fleet.close()
+
+
+def test_no_active_replicas_rejects_not_hangs(toy_artifact, oracle):
+    xs, _ = oracle
+    fleet = make_fleet(toy_artifact, n=2, request_deadline_s=2.0)
+    chaos = ChaosInjector().attach(fleet)
+    try:
+        chaos.kill("r0")
+        chaos.kill("r1")
+        futs = []
+        try:
+            for x in xs[:8]:
+                futs.append(fleet.submit(x))
+        except AdmissionError:
+            pass
+        assert wait_until(lambda: not fleet.active_replicas())
+        with pytest.raises(AdmissionError):
+            fleet.submit(xs[0])
+        for fut in futs:                 # accepted ones fail bounded, no hang
+            with pytest.raises(Exception):
+                fut.result(timeout=30)
+    finally:
+        chaos.heal_all()
+        fleet.close()
+
+
+# ---------------------------------------------------------------- plumbing
+def test_fleet_metrics_and_stats_shape(toy_artifact, oracle):
+    xs, wants = oracle
+    reg = MetricsRegistry()
+    with make_fleet(toy_artifact, n=2, registry=reg) as fleet:
+        for x, want in zip(xs[:4], wants[:4]):
+            assert_bit_exact(fleet.submit(x).result(timeout=30), want)
+        st = fleet.stats()
+        assert st["submitted"] == 4 and st["completed"] == 4
+        assert reg.get("fleet.submitted").value == 4
+        assert reg.get("fleet.active_replicas").value == 2
+        for rid in ("r0", "r1"):
+            rs = st["replicas"][rid]
+            assert rs["state"] == "active" and rs["strikes"] == 0
+        # per-batch completions heartbeat the monitor with step times
+        assert any(h.step_ema > 0 for h in fleet.monitor.hosts.values())
+
+
+def test_chaos_log_is_deterministic(toy_artifact):
+    fleet = make_fleet(toy_artifact, n=1)
+    chaos = ChaosInjector().attach(fleet)
+    try:
+        chaos.poison("r0", n_launches=2, after_launches=1)
+        sess = fleet.replicas()["r0"].session
+        x = np.zeros((1,) + tuple(sess.graph.shape("data"))[1:], np.int8)
+        sess._launch(x)                          # healthy (after_launches=1)
+        with pytest.raises(ChaosError):
+            sess._launch(x)
+        with pytest.raises(ChaosError):
+            sess._launch(x)
+        sess._launch(x)                          # poison exhausted
+        assert [e["kind"] for e in chaos.log] == ["poison", "poison"]
+        assert [e["launch"] for e in chaos.log] == [2, 3]
+    finally:
+        chaos.heal_all()
+        fleet.close()
